@@ -1,0 +1,56 @@
+"""Fig 4 analog: executable-cache (JIT code cache) sharing ON vs OFF.
+
+Registering N tenants of the same function family with a shared cache
+compiles once; the unshared baseline (per-context JIT) compiles N times —
+the paper's memory/alloc-time/warm-up effect, here measured as compile
+work and registration latency.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.functions import catalog, example_args
+from repro.core import ExecutableCache, HydraRuntime
+
+N_TENANTS = 6
+
+
+def _run_mode(shared: bool) -> dict:
+    rt = HydraRuntime(executable_cache=ExecutableCache(shared=shared),
+                      janitor=False)
+    spec = catalog()["py/thumbnail"]
+    reg_times = []
+    for t in range(N_TENANTS):
+        t0 = time.perf_counter()
+        rt.register_function(f"t{t}/thumb", spec, tenant=f"t{t}")
+        reg_times.append(time.perf_counter() - t0)
+    # first-invoke latency for the LAST tenant (warm-up elimination)
+    t0 = time.perf_counter()
+    rt.invoke(f"t{N_TENANTS-1}/thumb", example_args(spec))
+    first_invoke = time.perf_counter() - t0
+    stats = rt.exe_cache.stats()
+    rt.shutdown()
+    return {"reg_total_s": sum(reg_times), "reg_last_s": reg_times[-1],
+            "first_invoke_s": first_invoke,
+            "compiles": stats["entries"],
+            "compile_s": stats["total_compile_s"]}
+
+
+def run() -> list:
+    shared = _run_mode(True)
+    unshared = _run_mode(False)
+    return [
+        {"name": "code_cache.shared_reg_total",
+         "us_per_call": shared["reg_total_s"] * 1e6,
+         "derived": f"compiles={shared['compiles']}"},
+        {"name": "code_cache.unshared_reg_total",
+         "us_per_call": unshared["reg_total_s"] * 1e6,
+         "derived": f"compiles={unshared['compiles']};"
+                    f"compile_work_x={unshared['compile_s']/max(shared['compile_s'],1e-9):.1f}"},
+        {"name": "code_cache.shared_last_reg",
+         "us_per_call": shared["reg_last_s"] * 1e6,
+         "derived": f"vs_unshared={unshared['reg_last_s']/max(shared['reg_last_s'],1e-9):.1f}x"},
+        {"name": "code_cache.shared_first_invoke",
+         "us_per_call": shared["first_invoke_s"] * 1e6,
+         "derived": "warm_code_cache"},
+    ]

@@ -1,0 +1,80 @@
+"""Fig 6 analog: throughput per memory (ops/sec/GB), Hydra vs
+one-runtime-per-function.
+
+Hydra hosts ALL functions in one runtime/budget; the baseline dedicates a
+runtime (and its budget) per function. Efficiency = aggregate ops/sec
+divided by reserved GB.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.functions import catalog, example_args
+from repro.core import HydraRuntime
+
+N_CALLS = 30
+GB = 1 << 30
+
+
+def _throughput(rt, fids, args_map) -> float:
+    t0 = time.perf_counter()
+    futs = []
+    for i in range(N_CALLS):
+        fid = fids[i % len(fids)]
+        futs.append(rt.invoke_async(fid, args_map[fid]))
+    for f in futs:
+        f.result()
+    return N_CALLS / (time.perf_counter() - t0)
+
+
+def run() -> list:
+    rows = []
+    specs = catalog()
+    names = list(specs)
+
+    # --- Hydra: one runtime hosting every function ---
+    rt = HydraRuntime(janitor=False)
+    args_map = {}
+    for name in names:
+        rt.register_function(name, specs[name])
+        args_map[name] = example_args(specs[name])
+    # warm one pass
+    for name in names:
+        rt.invoke(name, args_map[name])
+    ops = _throughput(rt, names, args_map)
+    hydra_gb = rt.budget.used / GB
+    hydra_eff = ops / max(hydra_gb, 1e-9)
+    rt.shutdown()
+
+    # --- baseline: one runtime per function (stack redundancy) ---
+    # each worker reserves the paper's standard 128 MB function budget
+    per_fn_budget = 128 << 20
+    baseline_rts = {}
+    for name in names:
+        r = HydraRuntime(janitor=False)
+        r.register_function(name, specs[name], mem_budget=per_fn_budget)
+        r.invoke(name, args_map[name])
+        baseline_rts[name] = r
+    t0 = time.perf_counter()
+    futs = []
+    for i in range(N_CALLS):
+        name = names[i % len(names)]
+        futs.append(baseline_rts[name].invoke_async(name, args_map[name]))
+    for f in futs:
+        f.result()
+    base_ops = N_CALLS / (time.perf_counter() - t0)
+    base_gb = sum(r.budget.used for r in baseline_rts.values()) / GB
+    base_eff = base_ops / max(base_gb, 1e-9)
+    for r in baseline_rts.values():
+        r.shutdown()
+
+    rows.append({"name": "efficiency.hydra_ops_per_gb",
+                 "us_per_call": 1e6 / ops,
+                 "derived": f"ops_per_sec_per_gb={hydra_eff:.1f};"
+                            f"gb={hydra_gb:.3f}"})
+    rows.append({"name": "efficiency.per_fn_runtime_ops_per_gb",
+                 "us_per_call": 1e6 / base_ops,
+                 "derived": f"ops_per_sec_per_gb={base_eff:.1f};"
+                            f"gb={base_gb:.3f};"
+                            f"hydra_gain={hydra_eff/max(base_eff,1e-9):.1f}x"})
+    return rows

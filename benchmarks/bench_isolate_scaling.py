@@ -1,0 +1,34 @@
+"""Fig 3 analog: isolate (arena) startup time and per-isolate footprint as
+concurrent isolates scale up."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arena import ArenaPool
+
+
+def run() -> list:
+    rows = []
+    factory = lambda: {"kv": jnp.zeros((256, 1024), jnp.float32)}  # 1 MB
+    for n in (1, 8, 32, 128):
+        pool = ArenaPool(ttl_s=3600)
+        times = []
+        arenas = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            arenas.append(pool.acquire(("kv",), factory))
+            times.append(time.perf_counter() - t0)
+        per_iso = sum(a.nbytes for a in arenas) / n
+        rows.append({
+            "name": f"isolate_scaling.n{n}",
+            "us_per_call": float(np.mean(times)) * 1e6,
+            "derived": f"p99_us={float(np.percentile(times,99))*1e6:.0f};"
+                       f"bytes_per_isolate={per_iso:.0f}",
+        })
+        for a in arenas:
+            pool.release(a)
+        pool.drain()
+    return rows

@@ -1,0 +1,44 @@
+"""Fig 7 analog: function invocation latency — Hydra runtime path vs a bare
+jitted call (the "native runtime" bound). The virtualization layer should
+add only queue/arena overhead (paper: Graalvisor within ~22% of native)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.functions import catalog, example_args
+from repro.core import HydraRuntime
+
+REPS = 20
+
+
+def run() -> list:
+    rows = []
+    specs = catalog()
+    rt = HydraRuntime(janitor=False)
+    for name, spec in specs.items():
+        args = example_args(spec)
+        rt.register_function(name, spec)
+        rt.invoke(name, args)                       # warm
+        lat = []
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            rt.invoke(name, args)
+            lat.append(time.perf_counter() - t0)
+        # native bound: direct pre-compiled call
+        fn = jax.jit(spec.fn)
+        jax.block_until_ready(fn(spec.params, args))
+        nat = []
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(spec.params, args))
+            nat.append(time.perf_counter() - t0)
+        hyd, nav = float(np.median(lat)), float(np.median(nat))
+        rows.append({"name": f"latency.{name.replace('/', '_')}",
+                     "us_per_call": hyd * 1e6,
+                     "derived": f"native_us={nav*1e6:.0f};"
+                                f"overhead={100*(hyd-nav)/max(nav,1e-9):.0f}%"})
+    rt.shutdown()
+    return rows

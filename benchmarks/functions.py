@@ -1,0 +1,117 @@
+"""Serverless benchmark functions (paper Table 1 analogs, in JAX).
+
+SeBS/Photons-style workloads expressed as pure JAX callables so they run
+inside the Hydra runtime as registered functions: helloworld, filehashing,
+thumbnail, compress, video-processing, restapi, classify, uploader,
+dynamic-html.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.registry import CallableSpec
+
+_K = jax.random.PRNGKey(42)
+
+
+def _hello(params, args):
+    return {"msg": args["x"] * 0 + 1}
+
+
+def _hash(params, args):
+    """Polynomial rolling hash over a byte buffer (filehashing)."""
+    x = args["data"].astype(jnp.uint32)
+    powers = jnp.power(jnp.uint32(31), jnp.arange(x.shape[-1],
+                                                  dtype=jnp.uint32))
+    return {"digest": jnp.sum(x * powers, dtype=jnp.uint32)}
+
+
+def _thumbnail(params, args):
+    """Average-pool a 256x256x3 image to 64x64x3."""
+    img = args["image"]
+    h = img.reshape(64, 4, 64, 4, 3).mean(axis=(1, 3))
+    return {"thumb": h}
+
+
+def _compress(params, args):
+    """FFT + top-k magnitude truncation (lossy compression)."""
+    x = args["signal"]
+    f = jnp.fft.rfft(x)
+    mag = jnp.abs(f)
+    thresh = jnp.percentile(mag, 90)
+    return {"coeffs": jnp.where(mag >= thresh, f, 0)}
+
+
+def _video(params, args):
+    """Temporal smoothing conv over a frame stack (video-processing)."""
+    frames = args["frames"]                   # (T, H, W)
+    kern = jnp.array([0.25, 0.5, 0.25])
+    pad = jnp.pad(frames, ((1, 1), (0, 0), (0, 0)), mode="edge")
+    out = (pad[:-2] * kern[0] + pad[1:-1] * kern[1] + pad[2:] * kern[2])
+    return {"out": out}
+
+
+def _rest(params, args):
+    """Token scoring (restapi): embed + dot + softmax."""
+    scores = args["query"] @ params["table"].T
+    return {"top": jnp.argmax(jax.nn.softmax(scores), axis=-1)}
+
+
+def _classify(params, args):
+    h = jax.nn.relu(args["features"] @ params["w1"])
+    return {"label": jnp.argmax(h @ params["w2"], axis=-1)}
+
+
+def _uploader(params, args):
+    """Checksum + chunking of a payload (uploader)."""
+    x = args["payload"]
+    chunks = x.reshape(16, -1)
+    return {"chunk_sums": jnp.sum(chunks, axis=1),
+            "crc": jnp.sum(x, dtype=jnp.float32)}
+
+
+def _html(params, args):
+    """dynamic-html: template scatter of values into a page skeleton."""
+    page = jnp.zeros((2048,), jnp.float32)
+    idx = (args["slots"].astype(jnp.int32) % 2048)
+    return {"page": page.at[idx].add(args["values"])}
+
+
+def catalog() -> dict:
+    ks = jax.random.split(_K, 4)
+    return {
+        "js/helloworld": CallableSpec(
+            "helloworld", _hello, {"x": jnp.zeros((8,), jnp.float32)}),
+        "jv/filehashing": CallableSpec(
+            "filehashing", _hash,
+            {"data": jnp.zeros((4096,), jnp.uint8)}),
+        "py/thumbnail": CallableSpec(
+            "thumbnail", _thumbnail,
+            {"image": jnp.zeros((256, 256, 3), jnp.float32)}),
+        "py/compress": CallableSpec(
+            "compress", _compress, {"signal": jnp.zeros((8192,),
+                                                        jnp.float32)}),
+        "py/video": CallableSpec(
+            "video", _video, {"frames": jnp.zeros((16, 64, 64),
+                                                  jnp.float32)}),
+        "jv/restapi": CallableSpec(
+            "restapi", _rest, {"query": jnp.zeros((4, 64), jnp.float32)},
+            params={"table": jax.random.normal(ks[0], (128, 64))}),
+        "jv/classify": CallableSpec(
+            "classify", _classify,
+            {"features": jnp.zeros((8, 128), jnp.float32)},
+            params={"w1": jax.random.normal(ks[1], (128, 256)) * 0.1,
+                    "w2": jax.random.normal(ks[2], (256, 10)) * 0.1}),
+        "js/uploader": CallableSpec(
+            "uploader", _uploader, {"payload": jnp.zeros((65536,),
+                                                         jnp.float32)}),
+        "js/dynamic-html": CallableSpec(
+            "html", _html, {"slots": jnp.zeros((64,), jnp.int32),
+                            "values": jnp.ones((64,), jnp.float32)}),
+    }
+
+
+def example_args(spec: CallableSpec):
+    return jax.tree.map(lambda x: x + 1 if x.dtype != jnp.uint8 else x,
+                        spec.example_args)

@@ -1,0 +1,5 @@
+"""Roofline terms derived from the compiled dry-run (re-export).
+
+See src/repro/launch/roofline.py for the implementation and formulas.
+"""
+from repro.launch.roofline import (Roofline, analyze, collective_bytes)  # noqa: F401

@@ -1,0 +1,14 @@
+"""End-to-end driver: multi-tenant, multi-architecture LM serving with
+continuous batching through one Hydra runtime.
+
+  PYTHONPATH=src python examples/serve_multitenant.py
+"""
+import sys
+
+sys.path.insert(0, ".")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--archs", "qwen2.5-3b,mamba2-780m", "--tenants", "4",
+          "--requests", "24", "--slots", "4", "--max-new", "12"])

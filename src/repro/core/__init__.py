@@ -1,0 +1,21 @@
+"""Hydra virtualized runtime — the paper's primary contribution in JAX.
+
+One runtime process per pod slice hosts many registered functions (models)
+with shared AOT-compiled executables, pooled memory arenas (isolates), and
+byte-accurate budgets. See DESIGN.md for the paper-concept mapping.
+"""
+from repro.core.arena import Arena, ArenaPool, tree_bytes
+from repro.core.budget import MemoryBudget
+from repro.core.errors import (AdmissionError, FunctionNotRegisteredError,
+                               HydraError, HydraOOMError)
+from repro.core.executable_cache import ExecutableCache
+from repro.core.registry import CallableSpec, Function, FunctionRegistry, LMSpec
+from repro.core.runtime import HydraRuntime
+from repro.core.scheduler import ContinuousBatcher, TokenBucket
+
+__all__ = [
+    "Arena", "ArenaPool", "tree_bytes", "MemoryBudget", "ExecutableCache",
+    "CallableSpec", "Function", "FunctionRegistry", "LMSpec", "HydraRuntime",
+    "ContinuousBatcher", "TokenBucket", "HydraError", "HydraOOMError",
+    "FunctionNotRegisteredError", "AdmissionError",
+]

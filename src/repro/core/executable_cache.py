@@ -1,0 +1,117 @@
+"""ExecutableCache: AOT compilation + code-cache sharing (paper §3.3/§3.4).
+
+Programs are compiled ONCE per *program signature* — (architecture family,
+entrypoint, abstract shapes, mesh, dtype) — with weights passed as traced
+arguments, never closed over. Every tenant whose function shares a signature
+therefore shares a single compiled executable: the analog of Graalvisor
+co-locating Truffle contexts of one function so JIT code caches are reused.
+
+Compilation happens at registration (AOT, paper §3.4 Native Image analog),
+never on the request path. Optionally executables are persisted to disk via
+``jax.experimental.serialize_executable`` so a restarted runtime skips
+recompilation entirely (the Native-Image-binary-on-disk analog).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+@dataclass
+class CacheEntry:
+    key: tuple
+    compiled: Any
+    compile_s: float
+    hits: int = 0
+    created_at: float = field(default_factory=time.monotonic)
+
+
+class ExecutableCache:
+    def __init__(self, persist_dir: Optional[str] = None,
+                 shared: bool = True):
+        """``shared=False`` emulates the per-context-JIT baseline (every
+        registration compiles its own copy) for the Fig 4 experiment."""
+        self._entries: dict[tuple, CacheEntry] = {}
+        self._lock = threading.Lock()
+        self.persist_dir = persist_dir
+        self.shared = shared
+        self.total_compile_s = 0.0
+        if persist_dir:
+            os.makedirs(persist_dir, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _disk_path(self, key: tuple) -> Optional[str]:
+        if not self.persist_dir:
+            return None
+        h = abs(hash(key))
+        return os.path.join(self.persist_dir, f"exe_{h:016x}.bin")
+
+    def get_or_compile(self, key: tuple,
+                       lower_fn: Callable[[], Any],
+                       *, fid: Optional[str] = None) -> CacheEntry:
+        """lower_fn() must return a jax ``Lowered`` (we .compile() it)."""
+        if not self.shared and fid is not None:
+            key = key + ("fid", fid)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                entry.hits += 1
+                return entry
+
+        compiled = None
+        t0 = time.perf_counter()
+        path = self._disk_path(key)
+        if path and os.path.exists(path):
+            try:
+                from jax.experimental import serialize_executable as se
+                with open(path, "rb") as f:
+                    payload, in_tree, out_tree = pickle.load(f)
+                compiled = se.deserialize_and_load(payload, in_tree, out_tree)
+            except Exception:
+                compiled = None  # stale/incompatible snapshot: recompile
+        if compiled is None:
+            lowered = lower_fn()
+            compiled = lowered.compile()
+            if path:
+                try:
+                    from jax.experimental import serialize_executable as se
+                    payload, in_tree, out_tree = se.serialize(compiled)
+                    tmp = path + ".tmp"
+                    with open(tmp, "wb") as f:
+                        pickle.dump((payload, in_tree, out_tree), f)
+                    os.replace(tmp, path)
+                except Exception:
+                    pass
+        compile_s = time.perf_counter() - t0
+
+        entry = CacheEntry(key=key, compiled=compiled, compile_s=compile_s)
+        with self._lock:
+            # racing registration of the same signature: first one wins
+            existing = self._entries.get(key)
+            if existing is not None:
+                existing.hits += 1
+                return existing
+            self._entries[key] = entry
+            self.total_compile_s += compile_s
+        return entry
+
+    # ------------------------------------------------------------------
+    def contains(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def invalidate(self, key: tuple) -> None:
+        with self._lock:
+            self._entries.pop(key, None)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "hits": sum(e.hits for e in self._entries.values()),
+                "total_compile_s": self.total_compile_s,
+            }

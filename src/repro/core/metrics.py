@@ -1,0 +1,68 @@
+"""Lightweight counters/histograms for runtime accounting."""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+
+import numpy as np
+
+
+class Histogram:
+    def __init__(self):
+        self._vals: list[float] = []
+        self._lock = threading.Lock()
+
+    def observe(self, v: float):
+        with self._lock:
+            self._vals.append(float(v))
+
+    def percentile(self, q) -> float:
+        with self._lock:
+            if not self._vals:
+                return float("nan")
+            return float(np.percentile(self._vals, q))
+
+    @property
+    def count(self) -> int:
+        return len(self._vals)
+
+    @property
+    def mean(self) -> float:
+        with self._lock:
+            return float(np.mean(self._vals)) if self._vals else float("nan")
+
+    def snapshot(self) -> dict:
+        return {"count": self.count, "mean": self.mean,
+                "p50": self.percentile(50), "p99": self.percentile(99)}
+
+
+class Metrics:
+    def __init__(self):
+        self.counters = defaultdict(int)
+        self.hists: dict[str, Histogram] = defaultdict(Histogram)
+        self._lock = threading.Lock()
+
+    def inc(self, name: str, n: int = 1):
+        with self._lock:
+            self.counters[name] += n
+
+    def observe(self, name: str, v: float):
+        self.hists[name].observe(v)
+
+    def timeit(self, name: str):
+        metrics = self
+
+        class _Timer:
+            def __enter__(self):
+                self.t0 = time.perf_counter()
+                return self
+
+            def __exit__(self, *exc):
+                self.elapsed = time.perf_counter() - self.t0
+                metrics.observe(name, self.elapsed)
+        return _Timer()
+
+    def snapshot(self) -> dict:
+        return {"counters": dict(self.counters),
+                "hists": {k: h.snapshot() for k, h in self.hists.items()}}

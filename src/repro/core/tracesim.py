@@ -1,0 +1,309 @@
+"""Azure-trace reproduction (paper §4.4, Figures 9/10).
+
+A discrete-event simulator replays a multi-function multi-tenant invocation
+trace under three runtime models:
+
+  * ``openwhisk`` — one runtime per function instance, ONE invocation at a
+    time (classic FaaS worker); keep-alive TTL.
+  * ``photons``   — one runtime per function, MANY concurrent invocations
+    (virtualized single-function runtime).
+  * ``hydra``     — one runtime per TENANT hosting any of the tenant's
+    functions, many concurrent invocations, shared code caches; new runtime
+    instance when the 2 GB budget saturates (paper setup).
+
+Outputs: memory-over-time samples, per-request latencies (queue + startup +
+duration), cold-start counts, active runtime ("microVM") counts.
+
+The trace itself is synthetic but calibrated to the Shahrad et al. '20
+characterization the paper uses: Zipf function popularity, heavy-tailed
+inter-arrival, durations 100 ms - 3 s, per-function memory 120-170 MB.
+Startup-cost constants default to the paper's measurements and can be
+overridden with values measured by our own benchmarks (bench_startup).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+MB = 1 << 20
+GB = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SimParams:
+    # startup costs (seconds) — paper Fig 1/8 scale
+    runtime_cold_s: float = 0.150      # native runtime boot (cold start)
+    hydra_runtime_cold_s: float = 0.046  # AOT-compiled runtime boot (2-3x faster)
+    isolate_cold_s: float = 0.0005     # isolate/arena allocation (<500 us)
+    isolate_warm_s: float = 0.00005    # pool hit
+    fn_register_s: float = 0.010       # per-function code install (hydra)
+    # memory model (bytes)
+    runtime_base: int = 30 * MB        # native runtime RSS
+    hydra_runtime_base: int = 46 * MB  # polyglot runtime RSS (paper Fig 5)
+    isolate_base: int = 1 * MB         # pre-allocated isolate heap
+    runtime_cap: int = 2 * GB          # per-runtime budget (hydra/photons)
+    machine_cap: int = 16 * GB         # node budget (paper: 16 GB segment)
+    keepalive_s: float = 60.0          # worker keep-alive (openwhisk)
+    isolate_ttl_s: float = 10.0        # isolate pool TTL
+    vm_boot_s: float = 0.125           # Firecracker microVM boot
+    retry_backoff_s: float = 0.05      # queue retry when machine is full
+    max_wait_s: float = 30.0           # give up queueing after this
+
+
+@dataclass(frozen=True)
+class Invocation:
+    t: float
+    fid: int
+    tenant: int
+    duration_s: float
+    mem_bytes: int
+
+
+def gen_trace(n_functions: int = 40, n_tenants: int = 8,
+              duration_s: float = 600.0, mean_rps: float = 6.0,
+              seed: int = 0) -> list:
+    """Synthetic Azure-like trace (Shahrad et al. statistics)."""
+    rng = np.random.default_rng(seed)
+    # Zipf popularity over functions; functions assigned to tenants
+    pop = 1.0 / np.arange(1, n_functions + 1) ** 1.1
+    pop /= pop.sum()
+    tenant_of = rng.integers(0, n_tenants, n_functions)
+    # per-function memory: lognormal centered ~140 MB, clipped [64, 512] MB
+    fn_mem = np.clip(rng.lognormal(math.log(140), 0.35, n_functions),
+                     64, 512) * MB
+    out = []
+    t = 0.0
+    while t < duration_s:
+        t += rng.exponential(1.0 / mean_rps)
+        fid = int(rng.choice(n_functions, p=pop))
+        dur = float(np.clip(rng.lognormal(math.log(0.35), 0.7), 0.1, 3.0))
+        out.append(Invocation(t=t, fid=fid, tenant=int(tenant_of[fid]),
+                              duration_s=dur, mem_bytes=int(fn_mem[fid])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class _RuntimeInst:
+    key: tuple                     # grouping key (fid | tenant, index)
+    base_mem: int
+    cap: int
+    isolate_base: int = MB
+    live_mem: int = 0
+    live_invocations: int = 0
+    last_active: float = 0.0
+    warm_isolates: dict = field(default_factory=dict)  # mem -> (count, t)
+    functions_loaded: set = field(default_factory=set)
+
+    def mem(self) -> int:
+        # pooled isolates hold only their pre-allocated heap (~1 MB, paper
+        # Fig 3); an invocation's working memory is freed at completion
+        pool = sum(c for c, _ in self.warm_isolates.values()) \
+            * self.isolate_base
+        return self.base_mem + self.live_mem + pool
+
+
+@dataclass
+class SimResult:
+    model: str
+    latencies: list = field(default_factory=list)
+    overheads: list = field(default_factory=list)  # latency - pure duration
+    mem_samples: list = field(default_factory=list)     # (t, bytes)
+    runtime_count_samples: list = field(default_factory=list)  # (t, n)
+    cold_runtime_starts: int = 0
+    cold_isolate_starts: int = 0
+    warm_isolate_starts: int = 0
+    evicted_runtimes: int = 0
+    dropped: int = 0
+
+    def p(self, q) -> float:
+        return float(np.percentile(self.latencies, q)) if self.latencies else float("nan")
+
+    def mean_mem(self) -> float:
+        return float(np.mean([m for _, m in self.mem_samples]))
+
+    def mean_runtimes(self) -> float:
+        return float(np.mean([n for _, n in self.runtime_count_samples]))
+
+    def summary(self) -> dict:
+        return {
+            "model": self.model,
+            "requests": len(self.latencies),
+            "p50_s": self.p(50), "p99_s": self.p(99),
+            "overhead_p99_ms": 1e3 * float(np.percentile(self.overheads, 99))
+            if self.overheads else float("nan"),
+            "mean_mem_mb": self.mean_mem() / MB,
+            "peak_mem_mb": max(m for _, m in self.mem_samples) / MB
+            if self.mem_samples else 0,
+            "mean_runtimes": self.mean_runtimes(),
+            "cold_runtime": self.cold_runtime_starts,
+            "evicted_runtimes": self.evicted_runtimes,
+            "cold_isolate": self.cold_isolate_starts,
+            "warm_isolate": self.warm_isolate_starts,
+            "dropped": self.dropped,
+        }
+
+
+def simulate(trace: list, model: str, params: SimParams = SimParams(),
+             sample_dt: float = 1.0) -> SimResult:
+    """Replay ``trace`` under ``model`` in {openwhisk, photons, hydra}."""
+    assert model in ("openwhisk", "photons", "hydra"), model
+    p = params
+    res = SimResult(model=model)
+    insts: dict[tuple, list] = {}     # group key -> [_RuntimeInst]
+    events: list = []                  # (t, seq, kind, payload)
+    seq = 0
+
+    def total_mem() -> int:
+        return sum(r.mem() for group in insts.values() for r in group)
+
+    def n_runtimes() -> int:
+        return sum(len(g) for g in insts.values())
+
+    def group_key(inv: Invocation) -> tuple:
+        return (inv.tenant,) if model == "hydra" else (inv.fid,)
+
+    base_mem = p.hydra_runtime_base if model == "hydra" else p.runtime_base
+    runtime_cold = (p.hydra_runtime_cold_s if model == "hydra"
+                    else p.runtime_cold_s)
+
+    for inv in trace:
+        heapq.heappush(events, (inv.t, seq := seq + 1, "arrive", (inv, inv.t)))
+
+    next_sample = 0.0
+    while events:
+        t, _, kind, payload = heapq.heappop(events)
+        while next_sample <= t:
+            res.mem_samples.append((next_sample, total_mem()))
+            res.runtime_count_samples.append((next_sample, n_runtimes()))
+            next_sample += sample_dt
+
+        if kind == "done":
+            inst, inv = payload
+            inst.live_invocations -= 1
+            inst.last_active = t
+            if model == "openwhisk":
+                # worker stays resident (runtime + function memory) until
+                # keep-alive expiry; no isolate pool semantics
+                pass
+            else:
+                inst.live_mem -= inv.mem_bytes + p.isolate_base
+                # return isolate to pool (evicted after TTL)
+                cnt, _ = inst.warm_isolates.get(inv.mem_bytes, (0, t))
+                inst.warm_isolates[inv.mem_bytes] = (cnt + 1, t)
+                heapq.heappush(events, (t + p.isolate_ttl_s, seq := seq + 1,
+                                        "evict", (inst, inv.mem_bytes)))
+            continue
+
+        if kind == "evict":
+            inst, mem = payload
+            cnt, last = inst.warm_isolates.get(mem, (0, t))
+            if cnt > 0 and t - last >= p.isolate_ttl_s - 1e-9:
+                inst.warm_isolates[mem] = (0, last)
+            continue
+
+        if kind == "expire":
+            key = payload
+            group = insts.get(key, [])
+            keep = [r for r in group
+                    if r.live_invocations > 0
+                    or t - r.last_active < p.keepalive_s - 1e-9]
+            insts[key] = keep
+            continue
+
+        # ---- arrival (possibly a queued retry) ----
+        inv, orig_t = payload
+        key = group_key(inv)
+        group = insts.setdefault(key, [])
+        startup = 0.0
+        need = inv.mem_bytes + p.isolate_base
+
+        inst = None
+        warm_worker = False
+        if model == "openwhisk":
+            # one invocation per worker: find an idle warm worker (its
+            # runtime + function memory are already resident)
+            for r in group:
+                if r.live_invocations == 0:
+                    inst = r
+                    warm_worker = True
+                    break
+        else:
+            for r in group:
+                if r.mem() + need <= r.cap:
+                    inst = r
+                    break
+
+        if inst is None:
+            # new runtime instance (microVM boot + runtime cold start) if
+            # the machine has room; under pressure, LRU-evict idle runtimes
+            # first (platforms reclaim keep-alive workers); else queue with
+            # backoff (a real platform would spill to another node)
+            if total_mem() + base_mem + need > p.machine_cap:
+                idle = sorted((r for g in insts.values() for r in g
+                               if r.live_invocations == 0),
+                              key=lambda r: r.last_active)
+                while idle and total_mem() + base_mem + need > p.machine_cap:
+                    victim = idle.pop(0)
+                    insts[victim.key[:-1]].remove(victim)
+                    res.evicted_runtimes += 1
+            if total_mem() + base_mem + need > p.machine_cap:
+                if t - orig_t >= p.max_wait_s:
+                    res.dropped += 1
+                else:
+                    heapq.heappush(events,
+                                   (t + p.retry_backoff_s, seq := seq + 1,
+                                    "arrive", (inv, orig_t)))
+                continue
+            cap = p.runtime_cap if model != "openwhisk" else base_mem + need
+            inst = _RuntimeInst(key=key + (len(group),), base_mem=base_mem,
+                                cap=cap, isolate_base=p.isolate_base)
+            group.append(inst)
+            if model == "openwhisk":
+                inst.live_mem = inv.mem_bytes  # worker-resident fn memory
+            startup += p.vm_boot_s + runtime_cold
+            res.cold_runtime_starts += 1
+
+        # per-runtime code install (hydra/photons: first time this fid is
+        # loaded into this runtime; shared code caches amortize the rest)
+        if model != "openwhisk" and inv.fid not in inst.functions_loaded:
+            inst.functions_loaded.add(inv.fid)
+            startup += p.fn_register_s
+
+        # isolate acquire
+        if model == "openwhisk":
+            if warm_worker:
+                res.warm_isolate_starts += 1
+            else:
+                res.cold_isolate_starts += 1
+        else:
+            cnt, _ = inst.warm_isolates.get(inv.mem_bytes, (0, 0.0))
+            if cnt > 0:
+                inst.warm_isolates[inv.mem_bytes] = (cnt - 1, t)
+                startup += p.isolate_warm_s
+                res.warm_isolate_starts += 1
+            else:
+                startup += p.isolate_cold_s
+                res.cold_isolate_starts += 1
+            inst.live_mem += need
+
+        inst.live_invocations += 1
+        inst.last_active = t
+        latency = (t - orig_t) + startup + inv.duration_s
+        res.latencies.append(latency)
+        res.overheads.append(latency - inv.duration_s)
+        heapq.heappush(events, (t + startup + inv.duration_s,
+                                seq := seq + 1, "done", (inst, inv)))
+        heapq.heappush(events, (t + startup + inv.duration_s + p.keepalive_s,
+                                seq := seq + 1, "expire", key))
+
+    return res
+
+
+def compare(trace: list, params: SimParams = SimParams()) -> dict:
+    return {m: simulate(trace, m, params).summary()
+            for m in ("openwhisk", "photons", "hydra")}

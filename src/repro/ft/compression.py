@@ -1,0 +1,58 @@
+"""Gradient compression with error feedback (int8 quantized all-reduce).
+
+Wraps any optimizer: gradients are quantized to int8 per-tensor-scale before
+the (conceptual) cross-pod reduction, the dequantized values are applied,
+and the quantization error is fed back into the next step's gradients —
+bounding the bias (Karimireddy et al., error-feedback SGD).
+
+On the wire this cuts the cross-pod all-reduce bytes 4x (fp32->int8); the
+dry-run's collective term scales accordingly when enabled.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array) -> tuple:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@dataclass(frozen=True)
+class ErrorFeedbackCompression:
+    """Optimizer wrapper: compress(grad + residual), apply, carry residual."""
+    inner: object
+
+    def init(self, params):
+        return {
+            "inner": self.inner.init(params),
+            "residual": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(self, grads, state, params):
+        def comp(g, r):
+            corrected = g.astype(jnp.float32) + r
+            q, scale = quantize(corrected)
+            deq = dequantize(q, scale)
+            return deq, corrected - deq
+
+        pairs = jax.tree.map(comp, grads, state["residual"])
+        deq = jax.tree.map(lambda t: t[0], pairs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        resid = jax.tree.map(lambda t: t[1], pairs,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_params, inner_state, metrics = self.inner.update(
+            deq, state["inner"], params)
+        metrics = dict(metrics)
+        metrics["compression_bits"] = jnp.float32(8.0)
+        return new_params, {"inner": inner_state, "residual": resid}, metrics

@@ -1,0 +1,88 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy (``kernel_mode()``):
+  * ``auto``      — Pallas kernel on TPU, jnp reference elsewhere (CPU dry-run
+                    must see real HLO FLOPs, not an opaque callback).
+  * ``pallas``    — force the compiled Pallas kernel.
+  * ``interpret`` — Pallas kernel in interpret mode (CPU correctness tests).
+  * ``ref``       — force the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from repro.kernels import ref as _ref
+
+_MODE_ENV = "REPRO_KERNEL_MODE"
+_mode_override: str | None = None
+
+
+def set_kernel_mode(mode: str | None) -> None:
+    global _mode_override
+    assert mode in (None, "auto", "pallas", "interpret", "ref"), mode
+    _mode_override = mode
+
+
+def kernel_mode() -> str:
+    if _mode_override is not None:
+        return _mode_override
+    return os.environ.get(_MODE_ENV, "auto")
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """-> (use_kernel, interpret)"""
+    mode = kernel_mode()
+    if mode == "pallas":
+        return True, False
+    if mode == "interpret":
+        return True, True
+    if mode == "ref":
+        return False, False
+    return jax.default_backend() == "tpu", False
+
+
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps: float = 1e-5):
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels import rmsnorm as _k
+        return _k.rmsnorm(x, w, eps=eps, interpret=interp)
+    return _ref.rmsnorm_ref(x, w, eps)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None):
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels import flash_attention as _k
+        return _k.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale, interpret=interp)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=None, scale=None):
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels import decode_attention as _k
+        return _k.decode_attention(
+            q, k_cache, v_cache, lengths, window=window, scale=scale, interpret=interp)
+    return _ref.decode_attention_ref(
+        q, k_cache, v_cache, lengths, window=window, scale=scale)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=64, init_state=None, return_state=False):
+    use, interp = _use_pallas()
+    if use:
+        from repro.kernels import ssd_scan as _k
+        return _k.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, init_state=init_state,
+                           return_state=return_state, interpret=interp)
+    return _ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk, init_state=init_state,
+                             return_state=return_state)
+
+
+def ssd_decode(x, dt, A, Bm, Cm, state):
+    # Single-token state update is bandwidth-trivial; jnp path is used on all
+    # backends (XLA fuses it into one pass).
+    return _ref.ssd_decode_ref(x, dt, A, Bm, Cm, state)

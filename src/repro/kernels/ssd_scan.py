@@ -1,0 +1,114 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+Grid = (B, H, num_chunks); the chunk axis is sequential ("arbitrary") with
+the running (P, N) state held in VMEM scratch — the TPU-native shape of the
+SSD recurrence: the intra-chunk part is two MXU matmuls over (chunk x chunk)
+and (chunk x N) tiles, the inter-chunk part is a rank-N state update that
+never leaves VMEM. Chunk length and P/N are MXU-aligned by config (chunk a
+multiple of 8, P/N of 16+).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sf_ref,
+            state_scr, *, nc: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (chunk, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (1, chunk)
+    A = a_ref[0].astype(jnp.float32)             # scalar
+    Bm = b_ref[0].astype(jnp.float32)            # (chunk, N)
+    Cm = c_ref[0].astype(jnp.float32)            # (chunk, N)
+
+    a = dt[0] * A                                # (chunk,) log-decay
+    a_cs = jnp.cumsum(a)                         # (chunk,)
+    seg = a_cs[:, None] - a_cs[None, :]          # (l, s)
+    tril = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tril, jnp.exp(seg), 0.0)
+
+    dtx = dt[0][:, None] * x                     # (chunk, P)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_diag = jax.lax.dot_general(CB * L, dtx, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                       # (P, N)
+    y_off = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * jnp.exp(a_cs)[:, None]       # (chunk, P)
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    decay_tail = jnp.exp(a_cs[-1] - a_cs)        # (chunk,)
+    new_contrib = jax.lax.dot_general(
+        dtx, Bm * decay_tail[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (P, N)
+    state_scr[...] = state * jnp.exp(a_cs[-1]) + new_contrib
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        sf_ref[0, 0] = state_scr[...]
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=64, init_state=None,
+             return_state=False, interpret=False):
+    """x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N) -> y (B,S,H,P)
+    [, final_state (B,H,P,N) f32]."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, max(8, S))
+    s_pad = math.ceil(S / chunk) * chunk
+    if s_pad != S:
+        # dt=0 padding: decay 1, contribution 0 (state-exact; see ref.py)
+        x = jnp.pad(x, ((0, 0), (0, s_pad - S), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, s_pad - S), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, s_pad - S), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, s_pad - S), (0, 0)))
+    nc = s_pad // chunk
+
+    xt = jnp.moveaxis(x, 2, 1)                   # (B, H, S, P)
+    dtt = jnp.moveaxis(dt, 2, 1)[:, :, None, :]  # (B, H, 1, S)
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    kernel = functools.partial(_kernel, nc=nc, chunk=chunk)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, 0, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, s_pad, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xt, dtt, A, Bm, Cm, s0)
+    y = jnp.moveaxis(y, 1, 2)[:, :S]
+    if return_state:
+        return y, sf
+    return y

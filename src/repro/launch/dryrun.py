@@ -1,0 +1,395 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. derives parameter/cache/input shardings from the sharding policy,
+  3. ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` — no allocation,
+  4. records memory_analysis + cost_analysis + the collective schedule,
+  5. emits the roofline terms (benchmarks/roofline.py) to a JSON file.
+
+Train cells lower TWO programs: one gradient-accumulation microbatch
+(fwd+bwd, scaled x n_micro in the roofline) and the optimizer apply step —
+scan bodies are costed once by XLA cost analysis, so the dry-run lowers with
+``unroll=True`` for exact counts.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (AxisRules, default_rules, named_sharding_tree,
+                                   param_specs, use_rules)
+from repro.models.programs import ModelProgram
+from repro.optim import AdamW, constant
+
+
+def n_micro_for(cfg, shape) -> int:
+    """Gradient-accumulation depth: keep per-device microbatch ~1-4 seqs."""
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 4096:
+        return 16
+    if cfg.d_model >= 2048:
+        return 4
+    return 1
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_sharding(mesh, specs_tree):
+    ba = batch_axes(mesh)
+
+    def leaf(s):
+        if len(s.shape) == 0:
+            return NamedSharding(mesh, P())
+        b = s.shape[0]
+        n = 1
+        for a in ba:
+            n *= mesh.shape[a]
+        ax = ba if (b % n == 0 and b >= n) else None
+        return NamedSharding(mesh, P(ax, *([None] * (len(s.shape) - 1))))
+    return jax.tree.map(leaf, specs_tree)
+
+
+def _cache_sharding(mesh, cache_specs, rules):
+    """KV caches follow the same logical rules the model constraints use:
+    batch on (pod,data); seq on rules.kv_seq; heads on rules.kv_heads."""
+    ba = tuple(a for a in rules.batch if a)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+
+    def _axes_size(ax):
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def leaf_path(path, s):
+        name = str(path[-1].key) if path else ""
+        if name == "length":
+            return NamedSharding(mesh, P())
+        # stacked caches: (L, B, ...) — shard batch if divisible
+        dims = [None] * len(s.shape)
+        if (len(s.shape) >= 2 and ba and s.shape[1] % nb == 0
+                and s.shape[1] >= nb):
+            dims[1] = ba
+        if name in ("k", "v") and len(s.shape) == 5:
+            if rules.kv_seq and s.shape[2] % _axes_size(rules.kv_seq) == 0:
+                dims[2] = rules.kv_seq
+            if rules.kv_heads and s.shape[3] % _axes_size(rules.kv_heads) == 0:
+                dims[3] = rules.kv_heads
+        return NamedSharding(mesh, P(*dims))
+    return jax.tree_util.tree_map_with_path(leaf_path, cache_specs)
+
+
+def _abstract_params(prog: ModelProgram, dtype=None):
+    params = jax.eval_shape(lambda: prog.init(jax.random.PRNGKey(0)))
+    if dtype is not None:
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if s.dtype == jnp.float32 else s.dtype),
+            params)
+    return params
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = "experiments/dryrun", verbose: bool = True,
+             rules_override=None, tag: str = "", unroll=None,
+             n_micro_override=None, cast_bf16: bool = False,
+             grads_bf16: bool = False, remat_dots: bool = False,
+             ce_onehot: bool = False) -> dict:
+    from repro.launch.roofline import analyze
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    if unroll is None:
+        # single-pod cells power the roofline table and need exact
+        # cost_analysis (scan bodies are costed once); the multi-pod pass
+        # only proves the pod axis shards/compiles — scan keeps HLO small.
+        unroll = not multi_pod
+    prog = ModelProgram(cfg, remat=(shape.kind == "train"), unroll=unroll,
+                        ce_mode="onehot" if ce_onehot else "gather")
+
+    fsdp = shape.kind == "train" or cfg.serve_param_sharding == "fsdp"
+    kv_seq = shape_name == "long_500k"
+    rules = rules_override or default_rules(mesh, fsdp=fsdp, kv_seq=kv_seq)
+    rules = dataclasses.replace(rules, mesh=mesh)
+    if rules_override is None and shape.kind != "train":
+        # KV-cache layout: shard heads over model when GQA heads divide the
+        # TP degree; otherwise shard the cache SEQUENCE over model
+        # (flash-decode style) — replicated caches do not fit HBM for
+        # kv%16 != 0 archs at these shapes.
+        tp = mesh.shape.get("model", 1)
+        kv_heads = "model" if (cfg.n_kv_heads and cfg.n_kv_heads % tp == 0) \
+            else None
+        nd = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                nd *= mesh.shape[a]
+        cache_gb_per_shard = prog.cache_bytes(
+            shape.global_batch, shape.seq_len) / max(nd, 1) / 2**30
+        # replicated-over-model caches are FINE when small (and required
+        # for windowed local reads); shard S over model only to fit HBM
+        need_seq = kv_heads is None and cache_gb_per_shard > 4.0
+        seq_axes = tuple((["data"] if kv_seq else [])
+                         + (["model"] if need_seq else []))
+        rules = dataclasses.replace(
+            rules, kv_heads=kv_heads,
+            kv_seq=(seq_axes if seq_axes else None))
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "n_devices": n_dev,
+        "roofline_exact": bool(unroll),
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "model_flops": model_flops(cfg, shape),
+        "tag": tag,
+    }
+    t0 = time.perf_counter()
+    with use_rules(rules):
+        if shape.kind == "train":
+            if remat_dots:
+                prog.remat = "dots"
+            record.update(_run_train(prog, cfg, shape, mesh, rules,
+                                     n_micro_override, cast_bf16,
+                                     grads_bf16))
+        else:
+            record.update(_run_serve(prog, cfg, shape, mesh, rules, kv_seq))
+    record["compile_s"] = time.perf_counter() - t0
+
+    r = record["roofline"]
+    total_hlo_flops = r["flops_per_device"] * n_dev
+    record["useful_flops_frac"] = (record["model_flops"] / total_hlo_flops
+                                   if total_hlo_flops else 0.0)
+    record["roofline_frac"] = (
+        (record["model_flops"] / n_dev / 197e12) / r["t_bound"]
+        if r["t_bound"] else 0.0)
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        sfx = f"__{tag}" if tag else ""
+        path = os.path.join(
+            out_dir, f"{record['mesh']}__{arch}__{shape_name}{sfx}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {record['mesh']}: "
+              f"bottleneck={r['bottleneck']} "
+              f"t=(c {r['t_compute_s']:.4f}, m {r['t_memory_s']:.4f}, "
+              f"n {r['t_collective_s']:.4f})s "
+              f"useful={record['useful_flops_frac']:.2f} "
+              f"roofline={record['roofline_frac']:.2f} "
+              f"compile={record['compile_s']:.0f}s", flush=True)
+    return record
+
+
+def _mem_stats(compiled) -> dict:
+    from repro.launch.roofline import cpu_artifact_correction
+    ma = compiled.memory_analysis()
+    out = {k: getattr(ma, k) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")}
+    corr = cpu_artifact_correction(compiled.as_text())
+    # temp buffers created only by CPU bf16-legalization converts/copies
+    out["temp_corrected_bytes"] = max(
+        0, out["temp_size_in_bytes"] - int(corr["temp_bytes"]))
+    return out
+
+
+def _run_train(prog, cfg, shape, mesh, rules, n_micro_override=None,
+               cast_bf16: bool = False, grads_bf16: bool = False) -> dict:
+    from repro.launch.roofline import analyze
+    n_micro = n_micro_override or n_micro_for(cfg, shape)
+    micro_b = shape.global_batch // n_micro
+    micro_shape = dataclasses.replace(shape, global_batch=micro_b)
+
+    params_abs = _abstract_params(prog)                 # fp32 masters
+    pspecs = named_sharding_tree(params_abs, rules, cfg)
+    batch_abs = prog.input_specs(micro_shape)
+    bspecs = _batch_sharding(mesh, batch_abs)
+
+    def micro_step(params, batch):
+        def cast(p):
+            if not cast_bf16:
+                return p
+            # cast fp32 masters to bf16 while still SHARDED, so FSDP
+            # all-gathers move bf16 (half the wire bytes)
+            return jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32 else x, p)
+
+        if grads_bf16:
+            # differentiate wrt the bf16 copies: gradient reduce-scatters
+            # move bf16 on the wire; fp32 accumulation happens outside
+            pb = cast(params)
+            (loss, _), grads = jax.value_and_grad(
+                prog.loss_fn, has_aux=True)(pb, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def lossf(p, b):
+                return prog.loss_fn(cast(p), b)
+            (loss, _), grads = jax.value_and_grad(
+                lossf, has_aux=True)(params, batch)
+        return loss, grads
+
+    lowered = jax.jit(micro_step, in_shardings=(pspecs, bspecs)).lower(
+        params_abs, batch_abs)
+    compiled = lowered.compile()
+    micro_mem = _mem_stats(compiled)
+    roof_micro = analyze(compiled, mesh.size, scale=n_micro)
+
+    # optimizer apply (runs once per step)
+    opt = AdamW(lr=constant(3e-4))
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    ospecs = {"m": pspecs, "v": pspecs,
+              "step": NamedSharding(mesh, P())}
+
+    def apply_step(grads, opt_state, params):
+        return opt.update(grads, opt_state, params)
+
+    lowered_a = jax.jit(apply_step,
+                        in_shardings=(pspecs, ospecs, pspecs)).lower(
+        params_abs, opt_abs, params_abs)
+    compiled_a = lowered_a.compile()
+    apply_mem = _mem_stats(compiled_a)
+    roof_apply = analyze(compiled_a, mesh.size)
+
+    combined = dataclasses.replace(
+        roof_micro,
+        flops_per_device=roof_micro.flops_per_device
+        + roof_apply.flops_per_device,
+        bytes_per_device=roof_micro.bytes_per_device
+        + roof_apply.bytes_per_device,
+        wire_bytes_per_device=roof_micro.wire_bytes_per_device
+        + roof_apply.wire_bytes_per_device,
+    )
+    summary = combined.summary()
+    summary["t_bound"] = combined.t_bound
+    return {
+        "n_micro": n_micro,
+        "memory": {"micro_step": micro_mem, "apply_step": apply_mem},
+        "hbm_fit_bytes": micro_mem["argument_size_in_bytes"]
+        + micro_mem["temp_corrected_bytes"]
+        + apply_mem["argument_size_in_bytes"]
+        - _tree_sz(params_abs, mesh),    # params counted twice
+        "roofline": summary,
+    }
+
+
+def _tree_sz(tree, mesh) -> int:
+    return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(tree)) \
+        // mesh.size
+
+
+def _run_serve(prog, cfg, shape, mesh, rules, kv_seq=None) -> dict:
+    from repro.launch.roofline import analyze
+    dt = jnp.dtype(cfg.dtype)
+    params_abs = _abstract_params(prog, dtype=dt)       # bf16 serving weights
+    pspecs = named_sharding_tree(params_abs, rules, cfg)
+    batch_abs = prog.input_specs(shape)
+    bspecs = _batch_sharding(mesh, batch_abs)
+
+    if shape.kind == "prefill":
+        lowered = jax.jit(prog.prefill,
+                          in_shardings=(pspecs, bspecs)).lower(
+            params_abs, batch_abs)
+    else:
+        cache_abs = prog.cache_specs(shape.global_batch, shape.seq_len)
+        cspecs = _cache_sharding(mesh, cache_abs, rules)
+        lowered = jax.jit(
+            prog.decode_step, donate_argnums=(1,),
+            in_shardings=(pspecs, cspecs, bspecs)).lower(
+            params_abs, cache_abs, batch_abs)
+    compiled = lowered.compile()
+    mem = _mem_stats(compiled)
+    roof = analyze(compiled, mesh.size)
+    summary = roof.summary()
+    summary["t_bound"] = roof.t_bound
+    return {
+        "memory": {"step": mem},
+        "hbm_fit_bytes": mem["argument_size_in_bytes"]
+        + mem["temp_corrected_bytes"]
+        + mem["output_size_in_bytes"] - mem["alias_size_in_bytes"],
+        "roofline": summary,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in applicable_shapes(get_config(arch)):
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            mesh_tag = "2x16x16" if multi_pod else "16x16"
+            path = os.path.join(args.out, f"{mesh_tag}__{arch}__{shape}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[dryrun] skip {arch} x {shape} x {mesh_tag}")
+                continue
+            try:
+                run_cell(arch, shape, multi_pod=multi_pod, out_dir=args.out)
+            except Exception as e:
+                failures.append((arch, shape, mesh_tag, repr(e)))
+                print(f"[dryrun] FAIL {arch} x {shape} x {mesh_tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUN CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""Logical-axis sharding policy (MaxText-style rules).
+
+Models annotate activations with ``shard(x, "batch", "seq", None)`` using
+*logical* axis names; a thread-local ``AxisRules`` maps logical names to
+mesh axes. Parameter PartitionSpecs are derived from pytree paths by
+``param_specs``.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod, ``("data", "model")``
+single pod. Logical axes:
+
+  batch    -> (pod, data)            DP
+  kv_seq   -> data (long-context SP) or None
+  heads/ff/vocab/experts -> model    TP / EP
+  fsdp     -> data (param+optimizer sharding for training / big-model serve)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    mesh: Optional[Mesh] = None
+    batch: tuple = ("data",)          # ("pod","data") on multi-pod meshes
+    seq: Optional[str] = None         # activation seq sharding (rare)
+    kv_seq: object = None             # KV-cache seq sharding (axis or tuple)
+    kv_heads: Optional[str] = None    # KV-cache head sharding (GQA-divisible)
+    heads: Optional[str] = "model"
+    ff: Optional[str] = "model"
+    vocab: Optional[str] = "model"
+    experts: Optional[str] = "model"
+    fsdp: Optional[str] = None        # extra param-shard axis ("data")
+    moe_ff: Optional[str] = None      # 2D EP: expert FFN dim axis (e.g. "data")
+
+    def resolve(self, name):
+        if name is None:
+            return None
+        return getattr(self, name)
+
+
+_tls = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules):
+    prev = current_rules()
+    _tls.rules = rules
+    try:
+        yield rules
+    finally:
+        _tls.rules = prev
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = False, kv_seq: bool = False) -> AxisRules:
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    if kv_seq:
+        # sequence parallelism claims the data axis; batch keeps only pod
+        # (long-context cells have global_batch=1 anyway)
+        batch = tuple(a for a in batch if a != "data")
+    return AxisRules(
+        mesh=mesh,
+        batch=batch or (None,),
+        kv_seq="data" if (kv_seq and "data" in axes) else None,
+        heads="model" if "model" in axes else None,
+        ff="model" if "model" in axes else None,
+        vocab="model" if "model" in axes else None,
+        experts="model" if "model" in axes else None,
+        fsdp="data" if (fsdp and "data" in axes) else None,
+    )
+
+
+def logical_spec(*logical_axes) -> P:
+    """Resolve logical axis names to a PartitionSpec under current rules."""
+    rules = current_rules()
+    if rules is None:
+        return P()
+    out = []
+    for ax in logical_axes:
+        if ax is None:
+            out.append(None)
+        elif ax == "batch":
+            b = tuple(a for a in rules.batch if a)
+            out.append(b if b else None)
+        else:
+            out.append(rules.resolve(ax))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """Apply a with_sharding_constraint using logical axis names (no-op when
+    no rules/mesh are active — keeps single-device tests mesh-free)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = logical_spec(*logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules: pytree-path regex -> logical axes per dim.
+# Paths are "/"-joined dict keys; stacked layer params have a leading L dim
+# which is never sharded.
+# ---------------------------------------------------------------------------
+# (regex, logical axes for each dim — matched against the *trailing* dims,
+#  leading unmatched dims get None)
+_PARAM_RULES = [
+    (r"embed/tok$",            ("vocab", "fsdp")),
+    (r"lm_head$",              ("fsdp", "vocab")),
+    (r"attn/wq$",              ("fsdp", "heads")),
+    (r"attn/wk$",              ("fsdp", "kv_heads")),   # resolved specially
+    (r"attn/wv$",              ("fsdp", "kv_heads")),
+    (r"attn/wo$",              ("heads", "fsdp")),
+    (r"attn/bq$",              ("heads",)),
+    (r"attn/bk$",              ("kv_heads",)),
+    (r"attn/bv$",              ("kv_heads",)),
+    (r"mlp/w_gate$",           ("fsdp", "ff")),
+    (r"mlp/w_up$",             ("fsdp", "ff")),
+    (r"mlp/w_down$",           ("ff", "fsdp")),
+    (r"moe/router$",           ("fsdp", None)),
+    # expert parallelism owns the model axis. Default: shard D over fsdp.
+    # With rules.moe_ff set (2D EP), the per-expert FFN dim F is sharded
+    # instead — contraction stays local, avoiding per-step weight gathers.
+    (r"moe/w_gate$",           ("experts", "moe_d", "moe_f")),
+    (r"moe/w_up$",             ("experts", "moe_d", "moe_f")),
+    (r"moe/w_down$",           ("experts", "moe_f", "moe_d")),
+    (r"ssm/in_proj$",          ("fsdp", "ff")),
+    (r"ssm/out_proj$",         ("ff", "fsdp")),
+    (r"ssm/(conv_w|conv_b|A_log|D|dt_bias|norm)$", (None,)),
+    (r"(ln1|ln2|ln|final_norm|q_norm|k_norm)$", (None,)),
+]
+
+
+def _spec_for_path(path: str, shape: tuple, rules: AxisRules,
+                   kv_shardable: bool) -> P:
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            dims = []
+            for ax in logical:
+                if ax == "kv_heads":
+                    ax = "heads" if kv_shardable else None
+                elif ax == "moe_f":
+                    ax = "moe_ff" if rules.moe_ff else None
+                elif ax == "moe_d":
+                    ax = None if rules.moe_ff else "fsdp"
+                if ax is None:
+                    dims.append(None)
+                else:
+                    dims.append(rules.resolve(ax))
+            # pad leading dims (stacked layer axis etc.) with None
+            lead = len(shape) - len(dims)
+            spec = [None] * lead + dims
+            # drop illegal shardings (dim not divisible by axis size)
+            mesh = rules.mesh
+            clean = []
+            for size, ax in zip(shape, spec):
+                if ax is None:
+                    clean.append(None)
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a in axes:
+                    n *= mesh.shape[a]
+                clean.append(ax if size % n == 0 else None)
+            return P(*clean)
+    return P()  # replicate by default
+
+
+def param_specs(params, rules: AxisRules, cfg=None):
+    """PartitionSpec pytree matching ``params`` (dict-of-dict of arrays)."""
+    tp = rules.mesh.shape.get("model", 1) if rules.mesh else 1
+    kv_shardable = bool(cfg is None or cfg.n_kv_heads == 0
+                        or (cfg.n_kv_heads * cfg.resolved_head_dim) % max(
+                            1, tp * cfg.resolved_head_dim) == 0)
+    # KV projections are sharded over heads only when every shard gets whole
+    # heads; otherwise replicate (standard GQA TP practice).
+    if cfg is not None and cfg.n_kv_heads:
+        kv_shardable = cfg.n_kv_heads % tp == 0
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for keypath, leaf in flat:
+        path = "/".join(str(getattr(k, "key", k)) for k in keypath)
+        specs.append(_spec_for_path(path, leaf.shape, rules, kv_shardable))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_sharding_tree(params, rules: AxisRules, cfg=None):
+    specs = param_specs(params, rules, cfg)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

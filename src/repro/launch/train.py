@@ -1,0 +1,169 @@
+"""End-to-end training driver with checkpoint/restart, failure injection,
+straggler detection, elastic restore and optional gradient compression.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --reduced \\
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+  # node-failure drill: inject a failure, watch restore+resume
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m --reduced \\
+      --steps 30 --fail-at 12 --ckpt-dir /tmp/ck2
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Prefetcher
+from repro.ft import checkpoint as ckpt
+from repro.ft.compression import ErrorFeedbackCompression
+from repro.ft.failures import (FailureInjector, HeartbeatMonitor,
+                               InjectedFailure)
+from repro.launch.mesh import make_local_mesh
+from repro.launch.sharding import default_rules, named_sharding_tree, use_rules
+from repro.models.programs import ModelProgram
+from repro.optim import AdamW, warmup_cosine
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, name=cfg.name)
+    prog = ModelProgram(cfg, remat=args.remat)
+    opt = AdamW(lr=warmup_cosine(args.lr, args.warmup, args.steps))
+    if args.compress:
+        opt = ErrorFeedbackCompression(opt)
+    return cfg, prog, opt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--data-model", default="1,1",
+                    help="local mesh shape data,model")
+    args = ap.parse_args(argv)
+
+    cfg, prog, opt = build(args)
+    dm = [int(x) for x in args.data_model.split(",")]
+    mesh = make_local_mesh(dm[0], dm[1])
+    rules = default_rules(mesh, fsdp=True)
+
+    monitor = HeartbeatMonitor()
+    injector = FailureInjector(
+        fail_at_steps=(args.fail_at,) if args.fail_at else ())
+
+    with use_rules(rules):
+        params = prog.init(jax.random.PRNGKey(0))
+        pshard = named_sharding_tree(params, rules, cfg)
+        params = jax.tree.map(jax.device_put, params, pshard)
+        opt_state = opt.init(params)
+        step_fn = jax.jit(prog.make_train_step(opt, n_micro=args.n_micro),
+                          donate_argnums=(0, 1))
+
+        start_step = 0
+        writer = None
+        if args.ckpt_dir:
+            writer = ckpt.AsyncCheckpointer(args.ckpt_dir)
+            last = ckpt.latest_step(args.ckpt_dir)
+            if last is not None:
+                state = ckpt.restore(args.ckpt_dir, last,
+                                     {"params": params, "opt": opt_state})
+                params, opt_state = state["params"], state["opt"]
+                start_step = last + 1
+                print(f"[train] resumed from step {last}")
+
+        data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                              batch_size=args.batch)
+        pf = Prefetcher(data_cfg, start_step=start_step)
+        losses = []
+        t_start = time.perf_counter()
+        step = start_step
+        try:
+            while step < args.steps:
+                dstep, batch = pf.next()
+                assert dstep == step, (dstep, step)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                if cfg.family == "audio":
+                    rng = jax.random.PRNGKey(step)
+                    batch = {
+                        "embeds": jax.random.normal(
+                            rng, (args.batch, args.seq, cfg.d_model),
+                            jnp.float32).astype(jnp.dtype(cfg.dtype)),
+                        "labels": batch["labels"] % cfg.vocab_size,
+                    }
+                elif cfg.family == "vlm":
+                    ft_n = cfg.frontend_tokens
+                    rng = jax.random.PRNGKey(step)
+                    batch = {
+                        "embeds": jax.random.normal(
+                            rng, (args.batch, ft_n, cfg.d_model),
+                            jnp.float32).astype(jnp.dtype(cfg.dtype)),
+                        "tokens": batch["tokens"][:, :args.seq - ft_n],
+                        "labels": batch["labels"],
+                    }
+                try:
+                    injector.check(step)
+                    params, opt_state, mets = step_fn(params, opt_state,
+                                                      batch)
+                except InjectedFailure as e:
+                    print(f"[train] FAILURE: {e}")
+                    if not args.ckpt_dir:
+                        raise
+                    if writer:
+                        writer.wait()
+                    last = ckpt.latest_step(args.ckpt_dir)
+                    assert last is not None, "no checkpoint to restore"
+                    # elastic restore onto the (possibly new) mesh
+                    params = prog.init(jax.random.PRNGKey(0))
+                    params = jax.tree.map(jax.device_put, params, pshard)
+                    opt_state = opt.init(params)
+                    state = ckpt.restore(args.ckpt_dir, last,
+                                         {"params": params, "opt": opt_state})
+                    params, opt_state = state["params"], state["opt"]
+                    pf.close()
+                    step = last + 1
+                    pf = Prefetcher(data_cfg, start_step=step)
+                    print(f"[train] restored step {last}, resuming at {step}")
+                    continue
+                monitor.beat("worker0")
+                loss = float(mets["loss"])
+                losses.append(loss)
+                if step % 5 == 0 or step == args.steps - 1:
+                    dt = time.perf_counter() - t_start
+                    print(f"[train] step {step:4d} loss {loss:7.4f} "
+                          f"gnorm {float(mets.get('grad_norm', 0)):6.3f} "
+                          f"({dt:5.1f}s)", flush=True)
+                if writer and step % args.ckpt_every == 0:
+                    writer.save_async(step, {"params": params,
+                                             "opt": opt_state})
+                step += 1
+        finally:
+            pf.close()
+            if writer:
+                writer.wait()
+        print(f"[train] done: first loss {losses[0]:.4f} "
+              f"last loss {losses[-1]:.4f}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

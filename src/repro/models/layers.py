@@ -1,0 +1,41 @@
+"""Shared primitive layers: norms, init helpers, rotary embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def dense_init(rng, shape, in_axis: int = -2, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return ops.rmsnorm(x, w, eps=eps)
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """NeoX-style half-rotation rotary embedding.
+
+    x: (..., S, H, hd) or (..., H, hd) with matching positions (..., S)/(...,).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    # broadcast over the heads axis (which sits between S and hd)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(dtype)

@@ -1,0 +1,48 @@
+"""Feed-forward variants: SwiGLU (silu), GeGLU (gelu), squared-ReLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import shard
+from repro.models.layers import dense_init
+
+
+def is_gated(activation: str) -> bool:
+    return activation in ("silu", "gelu")
+
+
+def init_mlp(rng, cfg, stack: int | None = None):
+    d, f = cfg.d_model, cfg.d_ff
+    lead = (stack,) if stack else ()
+    ks = jax.random.split(rng, 3)
+    p = {"w_up": dense_init(ks[0], lead + (d, f)),
+         "w_down": dense_init(ks[1], lead + (f, d))}
+    if is_gated(cfg.activation):
+        p["w_gate"] = dense_init(ks[2], lead + (d, f))
+    return p
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def apply_mlp(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D)."""
+    dt = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    up = shard(up, "batch", None, "ff")
+    if is_gated(cfg.activation):
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = _act(gate, cfg.activation) * up
+    else:
+        h = _act(up, cfg.activation)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    return shard(out, "batch", None, None)

@@ -1,0 +1,199 @@
+"""ModelProgram: the uniform ABI every architecture exposes to the Hydra
+runtime and the launchers.
+
+Entrypoints (all pure, jit/AOT-compile friendly):
+  init(rng)                          -> params (fp32 masters)
+  loss_fn(params, batch)             -> (loss, metrics)
+  train_step(params, opt, batch)     -> (params, opt, metrics)   [grad accum]
+  prefill(params, batch)             -> (last_logits, cache)
+  decode_step(params, cache, batch)  -> (logits, cache)
+  input_specs(shape)                 -> ShapeDtypeStruct kwargs (no alloc)
+  cache_specs(batch, seq)            -> ShapeDtypeStruct cache pytree
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf
+
+AUX_WEIGHT = 0.01
+IGNORE = -1
+
+
+def cross_entropy(logits, labels, ignore: int = IGNORE,
+                  mode: str = "gather"):
+    """logits (B,S,V) any dtype, labels (B,S) int32 with `ignore` masking.
+
+    mode="gather": take_along_axis (baseline; an all-gather over
+    vocab-parallel logits under TP).
+    mode="onehot": iota-compare + masked reduction — contraction over the
+    sharded vocab dim stays local and reduces with one tiny psum.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    safe = jnp.clip(labels, 0, logits.shape[-1] - 1)
+    if mode == "onehot":
+        V = logits.shape[-1]
+        hit = jnp.arange(V, dtype=jnp.int32)[None, None, :] == safe[..., None]
+        ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    else:
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    mask = (labels != ignore).astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum((logz - ll) * mask) / n
+
+
+class ModelProgram:
+    def __init__(self, cfg: ArchConfig, *, remat=True,
+                 unroll: bool = False, ce_mode: str = "gather"):
+        self.cfg = cfg
+        self.remat = remat
+        self.unroll = unroll  # exact cost_analysis for the dry-run
+        self.ce_mode = ce_mode
+
+    # ------------------------------------------------------------------
+    def init(self, rng):
+        return tf.init_params(rng, self.cfg)
+
+    def _n_groups(self, batch) -> int:
+        if self.cfg.moe is None:
+            return 1
+        tokens = batch["tokens"] if "tokens" in batch else batch["embeds"]
+        B, S = tokens.shape[0], tokens.shape[1]
+        if self.cfg.family == "vlm":
+            S = S + self.cfg.frontend_tokens
+        from repro.models.moe import n_route_groups
+        kind = "decode" if S == 1 else "other"
+        return n_route_groups(B * S, kind, B)
+
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch):
+        logits, aux = tf.forward(
+            params, self.cfg,
+            tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            remat=self.remat, n_groups=self._n_groups(batch),
+            unroll=self.unroll)
+        ce = cross_entropy(logits, batch["labels"], mode=self.ce_mode)
+        loss = ce + AUX_WEIGHT * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def make_train_step(self, optimizer, n_micro: int = 1):
+        """Builds the (donatable) train step with gradient accumulation."""
+        def train_step(params, opt_state, batch):
+            def micro_grads(mb):
+                (loss, mets), grads = jax.value_and_grad(
+                    self.loss_fn, has_aux=True)(params, mb)
+                return grads, loss, mets
+
+            if n_micro == 1:
+                grads, loss, mets = micro_grads(batch)
+            else:
+                resh = jax.tree.map(
+                    lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                        + x.shape[1:]), batch)
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+                def body(carry, mb):
+                    acc, loss_acc = carry
+                    grads, loss, _ = micro_grads(mb)
+                    acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                    return (acc, loss_acc + loss), None
+
+                (grads, loss_sum), _ = jax.lax.scan(
+                    body, (g0, jnp.float32(0.0)), resh)
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+                loss = loss_sum / n_micro
+                mets = {}
+            new_params, new_opt, omets = optimizer.update(
+                grads, opt_state, params)
+            return new_params, new_opt, {"loss": loss, **omets}
+        return train_step
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch):
+        return tf.prefill(params, self.cfg,
+                          tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          n_groups=self._n_groups(batch),
+                          unroll=self.unroll)
+
+    def decode_step(self, params, cache, batch):
+        return tf.decode_step(params, self.cfg, cache,
+                              tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"),
+                              n_groups=self._n_groups(batch),
+                              unroll=self.unroll)
+
+    # ------------------------------------------------------------------
+    # Shape stand-ins (dry-run & arena sizing) — never allocate.
+    # ------------------------------------------------------------------
+    def cache_specs(self, batch: int, seq: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+        length = sds((batch,), jnp.int32)
+        if cfg.family == "ssm":
+            return {
+                "conv": sds((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                             ssm_mod.conv_dim(cfg)), dt),
+                "state": sds((cfg.n_layers, batch, cfg.ssm_heads,
+                              cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                "length": length,
+            }
+        hd = cfg.resolved_head_dim
+        kv = sds((cfg.n_layers, batch, seq, cfg.n_kv_heads, hd), dt)
+        if cfg.family == "hybrid":
+            napp = cfg.n_layers // cfg.hybrid_attn_every
+            return {
+                "conv": sds((cfg.n_layers, batch, cfg.ssm_conv - 1,
+                             ssm_mod.conv_dim(cfg)), dt),
+                "state": sds((cfg.n_layers, batch, cfg.ssm_heads,
+                              cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                "k": sds((napp, batch, seq, cfg.n_kv_heads, hd), dt),
+                "v": sds((napp, batch, seq, cfg.n_kv_heads, hd), dt),
+                "length": length,
+            }
+        return {"k": kv, "v": kv, "length": length}
+
+    def cache_bytes(self, batch: int, seq: int) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.cache_specs(batch, seq)))
+
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct stand-ins for the entrypoint named by shape.kind.
+
+        train  -> {tokens?, embeds?, labels}
+        prefill-> {tokens?, embeds?}
+        decode -> {tokens?/embeds?} (cache comes from cache_specs)
+        """
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        B, S = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "decode":
+            if cfg.family == "audio":
+                return {"embeds": sds((B, 1, cfg.d_model), dt)}
+            return {"tokens": sds((B, 1), jnp.int32)}
+        batch = {}
+        if cfg.family == "audio":
+            batch["embeds"] = sds((B, S, cfg.d_model), dt)
+        elif cfg.family == "vlm":
+            ft = cfg.frontend_tokens
+            batch["embeds"] = sds((B, ft, cfg.d_model), dt)
+            batch["tokens"] = sds((B, S - ft), jnp.int32)
+        else:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S), jnp.int32)
+        return batch
+
+    def param_bytes(self, dtype_bytes: int = 4) -> int:
+        return self.cfg.param_count() * dtype_bytes

@@ -1,0 +1,112 @@
+"""Mamba2 (SSD) block: in_proj -> causal depthwise conv -> chunked SSD scan
+-> gated RMSNorm -> out_proj. Single B/C group (n_groups=1).
+
+State for decode: (conv_state (B, k-1, conv_dim), ssm_state (B, H, P, N) f32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.launch.sharding import shard
+from repro.models.layers import dense_init
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_mamba(rng, cfg, stack: int | None = None):
+    d, din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cd = conv_dim(cfg)
+    lead = (stack,) if stack else ()
+    ks = jax.random.split(rng, 4)
+    # in_proj -> [z (din), xBC (din + 2N), dt (H)]
+    return {
+        "in_proj": dense_init(ks[0], lead + (d, 2 * din + 2 * N + H)),
+        "conv_w": dense_init(ks[1], lead + (cfg.ssm_conv, cd)) * 0.1,
+        "conv_b": jnp.zeros(lead + (cd,)),
+        "A_log": jnp.zeros(lead + (H,)),          # A = -exp(A_log) = -1
+        "D": jnp.ones(lead + (H,)),
+        "dt_bias": jnp.full(lead + (H,), -1.0),   # softplus(-1) ~ 0.31
+        "norm": jnp.zeros(lead + (din,)),
+        "out_proj": dense_init(ks[3], lead + (din, d)),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv. xbc (B,S,C), w (k,C), b (C,)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def _split_proj(zxbcdt, cfg):
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * N]
+    dt = zxbcdt[..., 2 * din + 2 * N:]
+    return z, xbc, dt
+
+
+def _gated_norm(y, z, w, eps):
+    dtype = y.dtype
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+            ).astype(dtype)
+
+
+def mamba_prefill(p, x, cfg, *, return_state: bool = False):
+    """x: (B, S, D) -> (out, (conv_state, ssm_state) | None)."""
+    B, S, _ = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dt_))
+    zxbcdt = shard(zxbcdt, "batch", None, "ff")
+    z, xbc_pre, dt = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+    xin, Bm, Cm = xbc[..., :din], xbc[..., din:din + N], xbc[..., din + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, H, P)
+    res = ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=min(cfg.ssm_chunk, S),
+                       return_state=return_state)
+    y, state = res if return_state else (res, None)
+    y = y + p["D"].astype(dt_)[None, None, :, None] * xh
+    y = _gated_norm(y.reshape(B, S, din), z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_))
+    out = shard(out, "batch", None, None)
+    if return_state:
+        k = cfg.ssm_conv
+        conv_state = xbc_pre[:, S - (k - 1):, :] if S >= k - 1 else jnp.pad(
+            xbc_pre, ((0, 0), (k - 1 - S, 0), (0, 0)))
+        return out, (conv_state, state)
+    return out, None
+
+
+def mamba_decode(p, x1, cfg, conv_state, ssm_state):
+    """Single-token step. x1 (B,1,D); conv_state (B,k-1,cd); ssm_state f32."""
+    B = x1.shape[0]
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    k = cfg.ssm_conv
+    dt_ = x1.dtype
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x1, p["in_proj"].astype(dt_))
+    z, xbc_pre, dt = _split_proj(zxbcdt[:, 0], cfg)
+    # conv over [conv_state ; xbc_pre]
+    win = jnp.concatenate([conv_state, xbc_pre[:, None, :]], axis=1)  # (B,k,cd)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(dt_))
+                      + p["conv_b"].astype(dt_))
+    new_conv = win[:, 1:, :]
+    xin, Bm, Cm = xbc[..., :din], xbc[..., din:din + N], xbc[..., din + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, H, P)
+    y, new_state = ops.ssd_decode(xh, dt, A, Bm, Cm, ssm_state)
+    y = y + p["D"].astype(dt_)[None, :, None] * xh
+    y = _gated_norm(y.reshape(B, din), z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"].astype(dt_))
+    return out[:, None, :], new_conv, new_state

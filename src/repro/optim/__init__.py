@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, global_norm
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = ["AdamW", "global_norm", "warmup_cosine", "constant"]

@@ -1,0 +1,21 @@
+import os
+
+# Tests must see the real single-device CPU backend (the 512-device override
+# is reserved for the dry-run); make sure nothing leaks in.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def bf16_params(prog, seed: int = 0):
+    params = prog.init(jax.random.PRNGKey(seed))
+    return jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x,
+        params)

@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd,causal,window", [
+    (2, 128, 4, 2, 64, True, None),
+    (1, 256, 4, 1, 32, True, 64),
+    (2, 100, 8, 8, 16, True, None),      # ragged S (padding path)
+    (1, 64, 4, 4, 128, False, None),     # non-causal
+    (1, 64, 16, 2, 8, True, 16),         # deep GQA + window
+])
+def test_flash_attention(B, S, Hq, Hkv, hd, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd,window", [
+    (2, 256, 4, 2, 64, None),
+    (3, 100, 8, 1, 32, None),            # ragged S
+    (2, 512, 4, 4, 128, 128),            # MHA + window
+    (1, 64, 16, 2, 16, None),
+])
+def test_decode_attention(B, S, Hq, Hkv, hd, window, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Hq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32).astype(dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out = decode_attention(q, k, v, lengths, window=window, interpret=True,
+                           block_k=64)
+    want = ref.decode_attention_ref(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,P,N,chunk,init", [
+    (2, 64, 4, 16, 16, 16, False),
+    (1, 100, 2, 32, 64, 32, True),       # ragged + init state
+    (2, 33, 4, 64, 32, 8, False),
+])
+def test_ssd_scan(B, S, H, P, N, chunk, init, dtype):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, S, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (B, S, N)) * 0.5).astype(dtype)
+    s0 = jax.random.normal(ks[5], (B, H, P, N)) if init else None
+    y, sf = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, init_state=s0,
+                     return_state=True, interpret=True)
+    yr, sr = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk, init_state=s0,
+                              return_state=True)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               **tol(dtype))
+    np.testing.assert_allclose(sf, sr, atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD == the literal state-space recurrence definition."""
+    ks = jax.random.split(KEY, 6)
+    B, S, H, P, N = 2, 48, 3, 8, 16
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    st = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(dt[:, t] * A[None, :])
+        st = st * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t], x[:, t], Bm[:, t])
+        ys.append(jnp.einsum("bhpn,bn->bhp", st, Cm[:, t]))
+    want = jnp.stack(ys, 1)
+    got, sf = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=16, return_state=True)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(sf, st, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_decode_matches_scan_tail():
+    """One ssd_decode step == extending the scan by one token."""
+    ks = jax.random.split(KEY, 6)
+    B, S, H, P, N = 2, 17, 2, 8, 8
+    x = jax.random.normal(ks[0], (B, S + 1, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S + 1, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S + 1, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S + 1, N)) * 0.5
+    y_full = ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=8)
+    _, state = ref.ssd_scan_ref(x[:, :S], dt[:, :S], A, Bm[:, :S],
+                                Cm[:, :S], chunk=8, return_state=True)
+    y1, _ = ref.ssd_decode_ref(x[:, S], dt[:, S], A, Bm[:, S], Cm[:, S],
+                               state)
+    np.testing.assert_allclose(y1, y_full[:, S], atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (2, 17, 128), (100, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+    w = jax.random.normal(KEY, shape[-1:]) * 0.1
+    out = rmsnorm(x, w, interpret=True, block_rows=16)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2, rtol=2e-2)

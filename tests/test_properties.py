@@ -1,0 +1,161 @@
+"""Hypothesis property tests on system invariants."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.arena import ArenaPool
+from repro.core.budget import MemoryBudget
+from repro.core.errors import HydraOOMError
+from repro.core.tracesim import SimParams, gen_trace, simulate
+from repro.data.pipeline import DataConfig, make_batch
+from repro.ft.compression import dequantize, quantize
+from repro.launch.roofline import _shape_bytes, collective_bytes
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.lists(st.integers(1, 1 << 20), min_size=1, max_size=40),
+       st.integers(1 << 20, 1 << 24))
+def test_budget_conservation(sizes, cap):
+    """used == sum(reserved) - sum(released); never exceeds capacity."""
+    b = MemoryBudget(cap)
+    live = []
+    for s in sizes:
+        try:
+            b.reserve(s)
+            live.append(s)
+        except HydraOOMError:
+            assert b.used + s > cap
+        if len(live) > 3:
+            b.release(live.pop(0))
+    assert b.used == sum(live)
+    assert 0 <= b.used <= cap
+    assert b.peak <= cap
+
+
+@SETTINGS
+@given(st.lists(st.sampled_from(["acq_a", "acq_b", "rel"]),
+                min_size=1, max_size=60))
+def test_arena_pool_conservation(ops):
+    """live arenas == acquired - evicted; idle never exceeds releases."""
+    pool = ArenaPool(ttl_s=1e9)
+    factory = lambda: {"x": jnp.zeros((16,), jnp.float32)}
+    held = []
+    for op in ops:
+        if op == "rel" and held:
+            pool.release(held.pop())
+        elif op.startswith("acq"):
+            held.append(pool.acquire((op[-1],), factory))
+    c = pool.metrics.counters
+    assert pool.live == c["arena.cold"]
+    assert pool.idle_count == pool.live - len(held)
+    assert c["arena.warm"] + c["arena.cold"] == len(
+        [o for o in ops if o.startswith("acq")])
+
+
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.integers(0, 10_000), st.integers(1, 8), st.integers(8, 64))
+def test_packing_label_shift_invariant(step, batch, seq):
+    cfg = DataConfig(vocab_size=97, seq_len=seq, batch_size=batch, seed=1)
+    b = make_batch(cfg, step)
+    assert b["tokens"].shape == (batch, seq)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    assert (b["tokens"] >= 0).all() and (b["tokens"] < 97).all()
+
+
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=200))
+def test_quantization_error_bound(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q, s = quantize(x)
+    err = float(jnp.max(jnp.abs(dequantize(q, s) - x)))
+    assert err <= float(s) * 0.5 + 1e-5      # round-to-nearest bound
+
+
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 16))
+def test_online_softmax_merge_associative(n1, n2, d):
+    """Two-block online-softmax merge == monolithic softmax (the invariant
+    the flash kernels rely on)."""
+    rng = np.random.default_rng(n1 * 1000 + n2 * 16 + d)
+    s1 = jnp.asarray(rng.normal(size=(n1,)) * 5)
+    s2 = jnp.asarray(rng.normal(size=(n2,)) * 5)
+    v1 = jnp.asarray(rng.normal(size=(n1, d)))
+    v2 = jnp.asarray(rng.normal(size=(n2, d)))
+
+    def block(s, v):
+        m = jnp.max(s)
+        p = jnp.exp(s - m)
+        return m, jnp.sum(p), p @ v
+
+    m1, l1, a1 = block(s1, v1)
+    m2, l2, a2 = block(s2, v2)
+    m = jnp.maximum(m1, m2)
+    l = l1 * jnp.exp(m1 - m) + l2 * jnp.exp(m2 - m)
+    acc = a1 * jnp.exp(m1 - m) + a2 * jnp.exp(m2 - m)
+    got = acc / l
+
+    s = jnp.concatenate([s1, s2])
+    v = jnp.concatenate([v1, v2])
+    want = jax.nn.softmax(s) @ v
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+def test_hlo_shape_bytes_parser():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[8], bf16[8])") == 32 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[16,2]<=[32]
+  %ar = f32[512]{0} all-reduce(%y), replica_groups={{0,1,2,3}}
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups=[4,8]<=[32]
+"""
+    out = collective_bytes(hlo)
+    assert out["count"] == 3
+    assert out["all-gather"] == 16 * 1024 * 2 * (1 / 2)
+    assert out["all-reduce"] == 2 * 512 * 4 * (3 / 4)
+    assert out["reduce-scatter"] == 64 * 4 * 7
+
+
+# ---------------------------------------------------------------------------
+@SETTINGS
+@given(st.integers(0, 3))
+def test_tracesim_invariants(seed):
+    trace = gen_trace(n_functions=20, n_tenants=4, duration_s=60,
+                      mean_rps=4.0, seed=seed)
+    assert all(t.duration_s >= 0.1 for t in trace)
+    for model in ("openwhisk", "photons", "hydra"):
+        res = simulate(trace, model, SimParams())
+        served = len(res.latencies) + res.dropped
+        assert served == len(trace)
+        # latency >= pure duration for every request
+        assert all(o >= -1e-9 for o in res.overheads)
+        # memory never exceeds the machine cap
+        assert all(m <= SimParams().machine_cap
+                   for _, m in res.mem_samples)
+
+
+def test_hydra_dominates_on_sparse_multi_tenant_trace():
+    """The paper's headline: hydra uses less memory than photons than
+    openwhisk under sparse multi-function traffic."""
+    trace = gen_trace(n_functions=100, n_tenants=10, duration_s=300,
+                      mean_rps=8.0, seed=1)
+    p = SimParams(keepalive_s=600.0)
+    mem = {m: simulate(trace, m, p).mean_mem()
+           for m in ("openwhisk", "photons", "hydra")}
+    assert mem["hydra"] < mem["photons"] < mem["openwhisk"]

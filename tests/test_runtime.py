@@ -1,0 +1,156 @@
+"""Hydra runtime behaviour: registration, invocation, isolation semantics,
+code-cache sharing, arena pooling, budgets, continuous batching."""
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import (CallableSpec, ContinuousBatcher, ExecutableCache,
+                        FunctionNotRegisteredError, HydraOOMError,
+                        HydraRuntime, LMSpec, MemoryBudget)
+from repro.core.arena import ArenaPool
+from repro.models.programs import ModelProgram
+
+from conftest import bf16_params
+
+
+def make_rt(**kw):
+    kw.setdefault("memory_budget_bytes", 1 << 30)
+    kw.setdefault("janitor", False)
+    return HydraRuntime(**kw)
+
+
+def simple_spec(name="affine"):
+    def fn(params, args):
+        return {"y": args["x"] * params["w"] + 1.0}
+    return CallableSpec(name=name, fn=fn,
+                        example_args={"x": jnp.ones((64,), jnp.float32)},
+                        params={"w": jnp.full((64,), 2.0)})
+
+
+# ---------------------------------------------------------------------------
+def test_register_invoke_deregister():
+    rt = make_rt()
+    try:
+        assert rt.register_function("f1", simple_spec())
+        out = rt.invoke("f1", {"x": jnp.full((64,), 3.0)})
+        assert float(out["y"][0]) == 7.0
+        # duplicate registration rejected
+        assert not rt.register_function("f1", simple_spec())
+        assert rt.deregister_function("f1")
+        with pytest.raises(FunctionNotRegisteredError):
+            rt.invoke("f1", {"x": jnp.ones((64,))})
+        assert not rt.deregister_function("f1")
+    finally:
+        rt.shutdown()
+
+
+def test_executable_cache_shared_across_tenants():
+    """Two tenants registering the same program compile ONCE (paper §3.3)."""
+    rt = make_rt()
+    try:
+        rt.register_function("a/f", simple_spec(), tenant="a")
+        rt.register_function("b/f", simple_spec(), tenant="b")
+        stats = rt.exe_cache.stats()
+        assert stats["entries"] == 1
+        assert stats["hits"] == 1
+    finally:
+        rt.shutdown()
+
+
+def test_executable_cache_unshared_baseline():
+    """shared=False = the per-context JIT baseline (compiles per fid)."""
+    rt = make_rt(executable_cache=ExecutableCache(shared=False))
+    try:
+        rt.register_function("a/f", simple_spec(), tenant="a")
+        rt.register_function("b/f", simple_spec(), tenant="b")
+        assert rt.exe_cache.stats()["entries"] == 2
+    finally:
+        rt.shutdown()
+
+
+def test_arena_pool_warm_and_ttl():
+    pool = ArenaPool(ttl_s=0.2)
+    factory = lambda: {"buf": jnp.zeros((1024,), jnp.float32)}
+    a = pool.acquire(("sig",), factory)
+    pool.release(a)
+    b = pool.acquire(("sig",), factory)
+    assert b is a                                  # warm hit
+    pool.release(b)
+    assert pool.metrics.counters["arena.warm"] == 1
+    time.sleep(0.3)
+    released = pool.evict_idle()
+    assert released == a.nbytes
+    assert pool.idle_count == 0
+
+
+def test_budget_oom():
+    b = MemoryBudget(1000)
+    b.reserve(800)
+    with pytest.raises(HydraOOMError):
+        b.reserve(300)
+    b.release(500)
+    b.reserve(300)
+    assert b.used == 600
+    assert b.peak == 800
+
+
+def test_runtime_budget_admission():
+    rt = make_rt(memory_budget_bytes=4 << 20)   # 4 MB runtime
+    try:
+        with pytest.raises(HydraOOMError):
+            rt.register_function(
+                "big", simple_spec(), mem_budget=16 << 20)
+    finally:
+        rt.shutdown()
+
+
+def test_lm_generate_deterministic_and_warm():
+    rt = make_rt(memory_budget_bytes=2 << 30)
+    try:
+        cfg = get_config("qwen2.5-3b").reduced()
+        params = bf16_params(ModelProgram(cfg))
+        rt.register_function("lm", LMSpec(cfg=cfg, params=params,
+                                          max_seq=64, slots=1))
+        t1 = rt.generate("lm", list(range(8)), max_new_tokens=6)
+        cold = rt.metrics.counters["arena.cold"]
+        t2 = rt.generate("lm", list(range(8)), max_new_tokens=6)
+        assert t1 == t2
+        assert rt.metrics.counters["arena.cold"] == cold  # pool hit
+        assert rt.metrics.counters["arena.warm"] >= 1
+    finally:
+        rt.shutdown()
+
+
+def test_continuous_batcher_matches_single_path():
+    rt = make_rt(memory_budget_bytes=2 << 30)
+    try:
+        cfg = get_config("granite-moe-1b-a400m").reduced()
+        params = bf16_params(ModelProgram(cfg))
+        rt.register_function("lm", LMSpec(cfg=cfg, params=params,
+                                          max_seq=64, slots=3))
+        single = rt.generate("lm", list(range(8)), max_new_tokens=5)
+        b = ContinuousBatcher(rt, "lm")
+        futs = [b.submit(list(range(8)), 5) for _ in range(5)]
+        b.run_until_done()
+        outs = [f.result() for f in futs]
+        assert all(o == single for o in outs)
+        # 5 requests over 3 slots share decode steps
+        assert b.steps < 5 * 5
+        b.close()
+    finally:
+        rt.shutdown()
+
+
+def test_invoke_latency_metrics_populated():
+    rt = make_rt()
+    try:
+        rt.register_function("f", simple_spec())
+        for _ in range(5):
+            rt.invoke("f", {"x": jnp.ones((64,))})
+        snap = rt.metrics.snapshot()
+        assert snap["hists"]["invoke_latency_s"]["count"] == 5
+    finally:
+        rt.shutdown()

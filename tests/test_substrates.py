@@ -1,0 +1,152 @@
+"""Data pipeline, checkpointing, fault tolerance, compression, optimizer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, Prefetcher, make_batch
+from repro.ft import checkpoint as ckpt
+from repro.ft.compression import ErrorFeedbackCompression, dequantize, quantize
+from repro.ft.failures import (FailureInjector, HeartbeatMonitor,
+                               InjectedFailure)
+from repro.optim import AdamW, constant, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+def test_data_deterministic_and_host_sharded():
+    cfg = DataConfig(vocab_size=100, seq_len=64, batch_size=4, seed=3)
+    a = make_batch(cfg, step=7)
+    b = make_batch(cfg, step=7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = make_batch(cfg, step=8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # different hosts get different data
+    cfg2 = DataConfig(vocab_size=100, seq_len=64, batch_size=4, seed=3,
+                      host_id=1, n_hosts=2)
+    d = make_batch(cfg2, step=7)
+    assert not np.array_equal(a["tokens"], d["tokens"])
+    # labels are inputs shifted by one
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_prefetcher_order_and_resume():
+    cfg = DataConfig(vocab_size=50, seq_len=32, batch_size=2)
+    pf = Prefetcher(cfg, start_step=5)
+    steps = [pf.next()[0] for _ in range(3)]
+    pf.close()
+    assert steps == [5, 6, 7]
+    # resume mid-stream reproduces the same batch
+    pf2 = Prefetcher(cfg, start_step=6)
+    s, batch = pf2.next()
+    pf2.close()
+    np.testing.assert_array_equal(batch["tokens"],
+                                  make_batch(cfg, 6)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16),
+                  "step": jnp.int32(7)}}
+    ckpt.save(str(tmp_path), 3, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 3
+    out = ckpt.restore(str(tmp_path), 3, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A step dir without its .done marker is not visible."""
+    tree = {"a": jnp.zeros(4)}
+    path = ckpt.save(str(tmp_path), 1, tree)
+    os.remove(path + ".done")
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+def test_async_checkpointer_gc(tmp_path):
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros(128)}
+    for s in range(5):
+        w.save_async(s, tree)
+        w.wait()
+    assert ckpt.list_steps(str(tmp_path)) == [3, 4]
+
+
+def test_elastic_restore_placement(tmp_path):
+    """Restore re-places leaves via shardings (elastic mesh change)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+    ckpt.save(str(tmp_path), 0, tree)
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    out = ckpt.restore(str(tmp_path), 0, tree, shardings=sh)
+    assert out["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+def test_failure_injector_fires_once():
+    inj = FailureInjector(fail_at_steps=(3,))
+    inj.check(2)
+    with pytest.raises(InjectedFailure):
+        inj.check(3)
+    inj.check(3)  # second attempt passes (recovery retried the step)
+
+
+def test_heartbeat_straggler_detection():
+    import time
+    mon = HeartbeatMonitor()
+    mon.beat("w0")
+    mon.beat("w1")
+    time.sleep(0.15)
+    mon.beat("w0")
+    assert mon.stragglers(0.1) == ["w1"]
+
+
+def test_train_driver_failure_recovery(tmp_path):
+    """End-to-end node-failure drill: fail at step 12, restore, resume,
+    finish — final losses must be finite and training must progress."""
+    from repro.launch.train import main
+    losses = main(["--arch", "mamba2-780m", "--reduced", "--steps", "18",
+                   "--batch", "2", "--seq", "32", "--fail-at", "12",
+                   "--ckpt-dir", str(tmp_path), "--ckpt-every", "5"])
+    assert len(losses) >= 18 - 11   # resumed from step 10/11
+    assert all(np.isfinite(losses))
+
+
+# ---------------------------------------------------------------------------
+def test_quantize_dequantize_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 5
+    q, s = quantize(x)
+    err = jnp.abs(dequantize(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_compression_converges():
+    """EF-compressed AdamW still optimizes a quadratic."""
+    opt = ErrorFeedbackCompression(AdamW(lr=constant(0.2),
+                                         weight_decay=0.0))
+    params = {"w": jnp.full((8,), 5.0)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(80):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 0.5
+
+
+def test_adamw_clip_and_schedule():
+    opt = AdamW(lr=warmup_cosine(1e-2, 5, 50), clip_norm=1.0)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    p2, state, mets = opt.update(huge, state, params)
+    assert float(mets["grad_norm"]) > 1e5
+    # clipped: update magnitude bounded by lr * O(1)
+    assert float(jnp.max(jnp.abs(p2["w"] - params["w"]))) < 1e-2
+    assert float(mets["lr"]) == pytest.approx(1e-2 / 5, rel=1e-3)
