@@ -1,14 +1,18 @@
-"""End-to-end driver: multi-tenant, multi-architecture LM serving with
-continuous batching through one Hydra runtime.
+"""End-to-end driver: multi-tenant, multi-architecture LM serving through
+the HydraPlatform — a pre-warmed runtime pool with colocation-aware
+placement — with continuous batching per function.
 
   PYTHONPATH=src python examples/serve_multitenant.py
 """
 import sys
+import tempfile
 
 sys.path.insert(0, ".")
 
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    main(["--archs", "qwen2.5-3b,mamba2-780m", "--tenants", "4",
-          "--requests", "24", "--slots", "4", "--max-new", "12"])
+    with tempfile.TemporaryDirectory() as snap_dir:
+        main(["--archs", "qwen2.5-3b,mamba2-780m", "--tenants", "4",
+              "--requests", "24", "--slots", "4", "--max-new", "12",
+              "--pool", "2", "--snapshot-dir", snap_dir])

@@ -25,12 +25,14 @@ def sparkline(samples, width=60):
 
 
 def main():
-    trace = gen_trace(n_functions=200, n_tenants=20, duration_s=600,
-                      mean_rps=10.0, seed=0)
-    params = SimParams(keepalive_s=600.0)
-    print(f"trace: {len(trace)} invocations over 600s, 200 fns, 20 tenants\n")
+    trace = gen_trace()
+    params = SimParams()
+    n_fns = len({i.fid for i in trace})
+    n_tenants = len({i.tenant for i in trace})
+    print(f"trace: {len(trace)} invocations over {trace[-1].t:.0f}s, "
+          f"{n_fns} fns, {n_tenants} tenants (default Azure-calibrated)\n")
     results = {}
-    for model in ("openwhisk", "photons", "hydra"):
+    for model in ("openwhisk", "photons", "hydra", "hydra-pool"):
         r = simulate(trace, model, params)
         results[model] = r
         s = r.summary()
@@ -44,11 +46,16 @@ def main():
               f"platform_overhead_p99={s['overhead_p99_ms']:.1f}ms\n")
     ow = results["openwhisk"].summary()
     hy = results["hydra"].summary()
+    hp = results["hydra-pool"].summary()
     print(f"hydra vs openwhisk: memory -"
           f"{100*(1-hy['mean_mem_mb']/ow['mean_mem_mb']):.0f}% "
           f"(paper: -83%), platform-overhead p99 -"
           f"{100*(1-hy['overhead_p99_ms']/ow['overhead_p99_ms']):.0f}% "
           f"(paper: e2e p99 -68%)")
+    print(f"platform pool vs hydra: cold starts {hp['cold_runtime']} vs "
+          f"{hy['cold_runtime']}, p99 -"
+          f"{1e3*(hy['p99_s']-hp['p99_s']):.1f}ms, memory -"
+          f"{100*(1-hp['mean_mem_mb']/hy['mean_mem_mb']):.0f}%")
 
 
 if __name__ == "__main__":

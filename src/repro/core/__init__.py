@@ -9,6 +9,7 @@ from repro.core.budget import MemoryBudget
 from repro.core.errors import (AdmissionError, FunctionNotRegisteredError,
                                HydraError, HydraOOMError)
 from repro.core.executable_cache import ExecutableCache
+from repro.core.platform import HydraPlatform, PlatformParams
 from repro.core.registry import CallableSpec, Function, FunctionRegistry, LMSpec
 from repro.core.runtime import HydraRuntime
 from repro.core.scheduler import ContinuousBatcher, TokenBucket
@@ -16,6 +17,7 @@ from repro.core.scheduler import ContinuousBatcher, TokenBucket
 __all__ = [
     "Arena", "ArenaPool", "tree_bytes", "MemoryBudget", "ExecutableCache",
     "CallableSpec", "Function", "FunctionRegistry", "LMSpec", "HydraRuntime",
+    "HydraPlatform", "PlatformParams",
     "ContinuousBatcher", "TokenBucket", "HydraError", "HydraOOMError",
     "FunctionNotRegisteredError", "AdmissionError",
 ]

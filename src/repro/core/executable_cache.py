@@ -13,6 +13,7 @@ recompilation entirely (the Native-Image-binary-on-disk analog).
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import pickle
 import threading
@@ -40,6 +41,8 @@ class ExecutableCache:
         self.persist_dir = persist_dir
         self.shared = shared
         self.total_compile_s = 0.0
+        self.compiles = 0        # actual XLA compilations (not disk loads)
+        self.disk_hits = 0       # executables deserialized from persist_dir
         if persist_dir:
             os.makedirs(persist_dir, exist_ok=True)
 
@@ -47,8 +50,10 @@ class ExecutableCache:
     def _disk_path(self, key: tuple) -> Optional[str]:
         if not self.persist_dir:
             return None
-        h = abs(hash(key))
-        return os.path.join(self.persist_dir, f"exe_{h:016x}.bin")
+        # stable across processes (builtin hash() is salted per process,
+        # which would make every restart miss its own persisted files)
+        h = hashlib.sha256(repr(key).encode()).hexdigest()[:16]
+        return os.path.join(self.persist_dir, f"exe_{h}.bin")
 
     def get_or_compile(self, key: tuple,
                        lower_fn: Callable[[], Any],
@@ -73,6 +78,7 @@ class ExecutableCache:
                 compiled = se.deserialize_and_load(payload, in_tree, out_tree)
             except Exception:
                 compiled = None  # stale/incompatible snapshot: recompile
+        loaded_from_disk = compiled is not None
         if compiled is None:
             lowered = lower_fn()
             compiled = lowered.compile()
@@ -97,6 +103,10 @@ class ExecutableCache:
                 return existing
             self._entries[key] = entry
             self.total_compile_s += compile_s
+            if loaded_from_disk:
+                self.disk_hits += 1
+            else:
+                self.compiles += 1
         return entry
 
     # ------------------------------------------------------------------
@@ -113,5 +123,7 @@ class ExecutableCache:
             return {
                 "entries": len(self._entries),
                 "hits": sum(e.hits for e in self._entries.values()),
+                "compiles": self.compiles,
+                "disk_hits": self.disk_hits,
                 "total_compile_s": self.total_compile_s,
             }

@@ -1,0 +1,437 @@
+"""HydraPlatform: the paper's platform layer over many HydraRuntimes.
+
+The single-node ``HydraRuntime`` converts *compilation* cold starts into
+arena cold starts; this layer removes the remaining *runtime* cold start
+and drives density (paper §4: 2.41x density, 21-44% memory reduction):
+
+  * **Pre-warmed instance pool** — generic, function-agnostic runtimes are
+    booted ahead of demand (the paper's "caching layer of pre-allocated
+    Hydra instances") and claimed by ANY tenant/function on its first
+    invocation, so no request ever waits on a runtime boot.
+  * **Colocation-aware placement** — invocations are packed across owners
+    and functions into already-running runtimes (tightest-fit first) until
+    the per-runtime memory budget saturates, then spill to a pool instance,
+    and only cold-boot when the pool is drained.
+  * **Sandbox snapshot/restore** — a function's weights + registry state
+    checkpoint to disk (``repro.ft.checkpoint``); an evicted function is
+    restored into a pooled runtime WITHOUT recompiling because every
+    runtime shares one ``ExecutableCache`` (and optionally its persistent
+    on-disk executables), so restore re-registration is a pure cache hit.
+
+All runtimes share one ExecutableCache: code-cache sharing spans the fleet,
+not just tenants within a runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+
+from repro.core.errors import (FunctionNotRegisteredError, HydraError,
+                               HydraOOMError)
+from repro.core.executable_cache import ExecutableCache
+from repro.core.metrics import Metrics
+from repro.core.runtime import GB, HydraRuntime, registration_budget
+from repro.ft import checkpoint as ckpt
+
+
+def estimate_bytes(spec) -> int:
+    """Placement-time estimate of a function's runtime footprint: the
+    reservation HydraRuntime.register_function makes PLUS one live arena
+    (the arena pool reserves budget again at first acquisition), so a
+    placement that fits the estimate can also serve without OOM."""
+    reserve, arena = registration_budget(spec)
+    return reserve + arena
+
+
+@dataclass
+class _FunctionRecord:
+    """Platform-side registry state for one function (survives eviction)."""
+    fid: str
+    spec: Any
+    tenant: str
+    mem_budget: Optional[int]
+    need_bytes: int
+    runtime: Optional[HydraRuntime] = None
+    snapshot_path: Optional[str] = None
+    params_spec: Any = None          # ShapeDtypeStruct tree of the weights
+    invocations: int = 0
+    evicted: bool = False            # weights dropped; restore() required
+    # serializes placement of THIS function so racing first invocations
+    # cannot register it into two runtimes
+    place_lock: threading.Lock = field(default_factory=threading.Lock)
+
+
+@dataclass
+class PlatformParams:
+    pool_size: int = 2                        # pre-warmed generic runtimes
+    runtime_budget_bytes: int = 2 * GB        # paper: 2 GB per runtime
+    max_runtimes: int = 64                    # node-level instance cap
+    arena_ttl_s: float = 10.0
+    n_workers: int = 2
+    janitor: bool = True                      # per-runtime arena TTL evictor
+    refill: bool = True                       # top pool back up after claim
+    snapshot_dir: Optional[str] = None        # enables snapshot/restore
+    persist_executables: bool = False         # share exe cache across boots
+
+
+class HydraPlatform:
+    """Fleet manager: pool + placement + snapshot, one shared code cache."""
+
+    def __init__(self, params: Optional[PlatformParams] = None, **kw):
+        self.params = params or PlatformParams(**kw)
+        p = self.params
+        persist = None
+        if p.snapshot_dir and p.persist_executables:
+            persist = os.path.join(p.snapshot_dir, "executables")
+        self.exe_cache = ExecutableCache(persist_dir=persist)
+        self.metrics = Metrics()
+        self._lock = threading.RLock()
+        self._pool: list[HydraRuntime] = []
+        self._active: list[HydraRuntime] = []
+        self._records: dict[str, _FunctionRecord] = {}
+        self._refills: list[threading.Thread] = []
+        self._booting = 0            # boot slots reserved but not finished
+        self._stopping = False
+        self.prewarm(p.pool_size)
+
+    # ------------------------------------------------------------------
+    # Pool
+    # ------------------------------------------------------------------
+    def _boot_runtime(self) -> HydraRuntime:
+        p = self.params
+        with self.metrics.timeit("runtime_boot_s"):
+            rt = HydraRuntime(memory_budget_bytes=p.runtime_budget_bytes,
+                              arena_ttl_s=p.arena_ttl_s,
+                              n_workers=p.n_workers,
+                              executable_cache=self.exe_cache,
+                              janitor=p.janitor)
+        self.metrics.inc("runtime.boots")
+        return rt
+
+    def prewarm(self, n: Optional[int] = None) -> None:
+        """Top the pool up to ``n`` (default: configured pool size)."""
+        n = self.params.pool_size if n is None else n
+        while True:
+            with self._lock:
+                # reserve a boot slot under the lock so concurrent refill
+                # threads cannot overshoot the pool or the node cap
+                if (self._stopping
+                        or len(self._pool) + self._booting >= n
+                        or (self.n_runtimes + self._booting
+                            >= self.params.max_runtimes)):
+                    return
+                self._booting += 1
+            rt = None
+            try:
+                rt = self._boot_runtime()
+            finally:
+                # release the slot and hand over the runtime atomically,
+                # so another thread cannot reserve + append in between
+                with self._lock:
+                    self._booting -= 1
+                    if rt is not None and not self._stopping:
+                        self._pool.append(rt)
+                        rt = None
+            if rt is not None:       # booted into a closing platform
+                rt.shutdown()
+                return
+
+    def _claim_runtime(self) -> HydraRuntime:
+        """Pop a pre-warmed runtime; cold-boot only when the pool is dry.
+        The replacement boot happens on a background thread — the claiming
+        request never waits on it."""
+        with self._lock:
+            rt = self._pool.pop() if self._pool else None
+            if rt is None:
+                # reserve the boot slot atomically with the cap check
+                if (self.n_runtimes + self._booting
+                        >= self.params.max_runtimes):
+                    raise HydraError(
+                        f"node runtime cap ({self.params.max_runtimes}) "
+                        "reached; a multi-node platform would spill to "
+                        "another host")
+                self._booting += 1
+        if rt is not None:
+            self.metrics.inc("pool.claim")
+            with self._lock:
+                self._active.append(rt)
+        else:
+            self.metrics.inc("pool.miss")
+            booted = None
+            try:
+                booted = self._boot_runtime()
+            finally:
+                with self._lock:
+                    self._booting -= 1
+                    if booted is not None:
+                        self._active.append(booted)
+            rt = booted
+        if self.params.refill:
+            t = threading.Thread(target=self.prewarm, daemon=True,
+                                 name="hydra-pool-refill")
+            t.start()
+            with self._lock:
+                self._refills = [x for x in self._refills
+                                 if x.is_alive()] + [t]
+        return rt
+
+    def _return_runtime(self, rt: HydraRuntime) -> None:
+        """An emptied runtime goes back to the pool (or shuts down if the
+        pool is already full)."""
+        # release idle-arena budget immediately: a pooled instance must be
+        # generic again, not carry reservations from its previous tenant
+        rt.arena_pool.drain()
+        with self._lock:
+            if len(rt.registry) > 0 or rt not in self._active:
+                return               # raced a placement (or already gone)
+            self._active.remove(rt)
+            if len(self._pool) < self.params.pool_size:
+                self._pool.append(rt)
+                returned = True
+            else:
+                returned = False
+        if returned:
+            self.metrics.inc("pool.return")
+        else:
+            rt.shutdown()
+            self.metrics.inc("runtime.shutdowns")
+
+    @property
+    def pool_available(self) -> int:
+        with self._lock:
+            return len(self._pool)
+
+    @property
+    def n_runtimes(self) -> int:
+        with self._lock:
+            return len(self._pool) + len(self._active)
+
+    # ------------------------------------------------------------------
+    # Registration + placement
+    # ------------------------------------------------------------------
+    def register_function(self, fid: str, spec, *, tenant: str = "default",
+                          mem_budget: Optional[int] = None,
+                          eager: bool = False) -> bool:
+        """Admit a function to the platform. Placement is lazy by default:
+        the first invocation claims/packs a runtime (paper: pool instances
+        are claimed on first invocation). ``eager=True`` places now, keeping
+        even the arena cold start off the request path."""
+        need = mem_budget or estimate_bytes(spec)
+        if need > self.params.runtime_budget_bytes:
+            # reject at admission (paper §3.1) instead of OOMing on the
+            # first request: no runtime can ever host this function
+            raise HydraOOMError(
+                f"{fid}: needs {need} bytes, above the per-runtime budget "
+                f"of {self.params.runtime_budget_bytes}")
+        with self._lock:
+            if fid in self._records:
+                return False
+            rec = _FunctionRecord(
+                fid=fid, spec=spec, tenant=tenant, mem_budget=mem_budget,
+                need_bytes=need,
+                params_spec=jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    spec.params))
+            self._records[fid] = rec
+        if eager:
+            self._ensure_placed(rec)
+        return True
+
+    def _ensure_placed(self, rec: _FunctionRecord) -> HydraRuntime:
+        # per-record lock: racing first invocations of one fid must not
+        # both run placement (the loser would register a zombie copy into
+        # a second runtime)
+        with rec.place_lock:
+            if rec.runtime is not None:
+                return rec.runtime
+            if rec.evicted:
+                raise FunctionNotRegisteredError(
+                    f"{rec.fid} (evicted; call restore() first)")
+            with self._lock:
+                # colocation: pack into the fullest runtime that still
+                # fits — first-fit-decreasing keeps spare runtimes empty
+                # so they can drain back to the pool
+                candidates = sorted(self._active,
+                                    key=lambda r: r.budget.used,
+                                    reverse=True)
+            for rt in candidates:
+                if rt.budget.free < rec.need_bytes:
+                    continue
+                try:
+                    if rt.register_function(rec.fid, rec.spec,
+                                            tenant=rec.tenant,
+                                            mem_budget=rec.mem_budget):
+                        with self._lock:
+                            still_active = rt in self._active
+                        if not still_active:
+                            # raced an eviction that returned/shut down
+                            # this runtime after we snapshotted candidates
+                            rt.deregister_function(rec.fid)
+                            continue
+                        self.metrics.inc("place.colocated")
+                        rec.runtime = rt
+                        return rt
+                except HydraOOMError:
+                    continue        # raced/underestimated: try the next
+            # saturated everywhere: spill to a pool instance
+            rt = self._claim_runtime()
+            try:
+                ok = rt.register_function(rec.fid, rec.spec,
+                                          tenant=rec.tenant,
+                                          mem_budget=rec.mem_budget)
+            except HydraError:
+                self._return_runtime(rt)
+                raise
+            if not ok:
+                self._return_runtime(rt)
+                raise HydraError(f"placement of {rec.fid} rejected")
+            self.metrics.inc("place.spill")
+            rec.runtime = rt
+            return rt
+
+    def _record(self, fid: str) -> _FunctionRecord:
+        with self._lock:
+            rec = self._records.get(fid)
+        if rec is None:
+            raise FunctionNotRegisteredError(fid)
+        return rec
+
+    def runtime_for(self, fid: str) -> HydraRuntime:
+        """The runtime hosting ``fid`` (placing it first if needed)."""
+        return self._ensure_placed(self._record(fid))
+
+    def placement(self) -> dict:
+        """fid -> runtime index (active runtimes only), for introspection."""
+        with self._lock:
+            idx = {id(rt): i for i, rt in enumerate(self._active)}
+            return {fid: idx[id(rec.runtime)]
+                    for fid, rec in self._records.items()
+                    if rec.runtime is not None}
+
+    # ------------------------------------------------------------------
+    # Request path
+    # ------------------------------------------------------------------
+    def invoke(self, fid: str, args: Any) -> Any:
+        rec = self._record(fid)
+        rt = self._ensure_placed(rec)
+        rec.invocations += 1
+        return rt.invoke(fid, args)
+
+    def generate(self, fid: str, prompt_tokens, max_new_tokens: int = 16):
+        rec = self._record(fid)
+        rt = self._ensure_placed(rec)
+        rec.invocations += 1
+        return rt.generate(fid, prompt_tokens, max_new_tokens)
+
+    # ------------------------------------------------------------------
+    # Snapshot / evict / restore (paper: sandbox checkpointing)
+    # ------------------------------------------------------------------
+    def _snapshot_root(self, fid: str) -> str:
+        if not self.params.snapshot_dir:
+            raise HydraError("snapshot_dir not configured")
+        safe = fid.replace("/", "__")
+        return os.path.join(self.params.snapshot_dir, "functions", safe)
+
+    def snapshot(self, fid: str) -> str:
+        """Checkpoint weights + registry state for one function."""
+        rec = self._record(fid)
+        with rec.place_lock:     # atomic vs evict() nulling the weights
+            return self._snapshot_locked(rec)
+
+    def _snapshot_locked(self, rec: _FunctionRecord) -> str:
+        if rec.evicted:
+            # weights are gone from memory; the existing checkpoint is the
+            # only copy — never overwrite it with an empty tree
+            if rec.snapshot_path:
+                return rec.snapshot_path
+            raise HydraError(f"{rec.fid}: evicted without a snapshot")
+        root = self._snapshot_root(rec.fid)
+        with self.metrics.timeit("snapshot_s"):
+            path = ckpt.save(root, 0, {"params": rec.spec.params})
+            state = {"fid": rec.fid, "tenant": rec.tenant,
+                     "mem_budget": rec.mem_budget,
+                     "invocations": rec.invocations,
+                     "kind": type(rec.spec).__name__}
+            with open(os.path.join(root, "registry.json"), "w") as f:
+                json.dump(state, f)
+        rec.snapshot_path = root
+        self.metrics.inc("snapshots")
+        return path
+
+    def evict(self, fid: str, *, snapshot: bool = True) -> None:
+        """Deregister ``fid`` from its runtime (if placed), freeing budget;
+        weights are snapshotted first so the function can be restored
+        later, then dropped from host memory either way. A runtime left
+        empty drains back to the pre-warmed pool."""
+        rec = self._record(fid)
+        with rec.place_lock:
+            if rec.evicted:
+                return
+            if snapshot and rec.snapshot_path is None:
+                self._snapshot_locked(rec)
+            rt, rec.runtime = rec.runtime, None
+            if rt is not None:
+                rt.deregister_function(fid)
+            # drop the weights so eviction actually releases memory; the
+            # snapshot (or the caller's restore) is now the only copy
+            rec.spec = dataclasses.replace(rec.spec, params=None)
+            rec.evicted = True
+            self.metrics.inc("evictions")
+            if rt is not None and len(rt.registry) == 0:
+                self._return_runtime(rt)
+
+    def restore(self, fid: str, *, eager: bool = True) -> None:
+        """Reload an evicted function from its snapshot into the fleet.
+        Re-registration hits the shared ExecutableCache, so no request-path
+        (or restore-path) compilation happens."""
+        rec = self._record(fid)
+        with rec.place_lock:
+            if rec.runtime is not None:
+                return
+            if rec.evicted:
+                if rec.snapshot_path is None:
+                    raise HydraError(f"{fid}: no snapshot to restore from")
+                with self.metrics.timeit("restore_s"):
+                    tree = ckpt.restore(rec.snapshot_path, 0,
+                                        {"params": rec.params_spec})
+                rec.spec = dataclasses.replace(rec.spec,
+                                               params=tree["params"])
+                rec.evicted = False
+                self.metrics.inc("restores")
+        if eager:
+            self._ensure_placed(rec)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            active = list(self._active)
+            n_pool = len(self._pool)
+            n_funcs = sum(r.runtime is not None for r in
+                          self._records.values())
+        return {
+            "runtimes_active": len(active),
+            "runtimes_pooled": n_pool,
+            "functions_placed": n_funcs,
+            "functions_known": len(self._records),
+            "budget_used": sum(rt.budget.used for rt in active),
+            "exe_cache": self.exe_cache.stats(),
+            "metrics": self.metrics.snapshot(),
+        }
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._stopping = True
+            refills = list(self._refills)
+        for t in refills:
+            t.join(timeout=5.0)
+        with self._lock:
+            rts = self._pool + self._active
+            self._pool, self._active = [], []
+        for rt in rts:
+            rt.shutdown()

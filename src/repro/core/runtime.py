@@ -31,6 +31,22 @@ from repro.models.programs import ModelProgram
 GB = 1 << 30
 
 
+def registration_budget(spec, prog=None) -> tuple:
+    """(registration reservation bytes, one-arena bytes) for a spec — the
+    single source of truth for admission math, shared by the runtime's
+    reservation and the platform's placement estimate. Pass ``prog`` when
+    an LMSpec's ModelProgram is already built."""
+    if isinstance(spec, CallableSpec):
+        reserve = (tree_bytes(spec.example_args) + tree_bytes(spec.params)
+                   + spec.arena_bytes)
+        return reserve, spec.arena_bytes
+    if isinstance(spec, LMSpec):
+        prog = prog or ModelProgram(spec.cfg, remat=False)
+        cache = prog.cache_bytes(spec.slots, spec.max_seq)
+        return tree_bytes(spec.params) + cache, cache
+    raise TypeError(type(spec))
+
+
 class HydraRuntime:
     def __init__(self, *,
                  memory_budget_bytes: int = 2 * GB,  # paper: 2 GB per runtime
@@ -77,8 +93,7 @@ class HydraRuntime:
 
     def _register_callable(self, fid, spec: CallableSpec, tenant,
                            mem_budget) -> Function:
-        budget = mem_budget or (tree_bytes(spec.example_args)
-                                + tree_bytes(spec.params) + spec.arena_bytes)
+        budget = mem_budget or registration_budget(spec)[0]
         self.budget.reserve(budget)
         args_spec = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
@@ -106,8 +121,7 @@ class HydraRuntime:
         prog = ModelProgram(spec.cfg, remat=False)
         B, S = spec.slots, spec.max_seq
         cache_specs = prog.cache_specs(B, S)
-        budget = mem_budget or (tree_bytes(spec.params)
-                                + prog.cache_bytes(B, S))
+        budget = mem_budget or registration_budget(spec, prog)[0]
         self.budget.reserve(budget)
         params_spec = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), spec.params)

@@ -1,7 +1,7 @@
 """Azure-trace reproduction (paper §4.4, Figures 9/10).
 
 A discrete-event simulator replays a multi-function multi-tenant invocation
-trace under three runtime models:
+trace under four runtime models:
 
   * ``openwhisk`` — one runtime per function instance, ONE invocation at a
     time (classic FaaS worker); keep-alive TTL.
@@ -10,6 +10,11 @@ trace under three runtime models:
   * ``hydra``     — one runtime per TENANT hosting any of the tenant's
     functions, many concurrent invocations, shared code caches; new runtime
     instance when the 2 GB budget saturates (paper setup).
+  * ``hydra-pool`` — the HydraPlatform layer: colocation ACROSS tenants
+    (any runtime hosts any owner's functions, packed until the 2 GB budget
+    saturates) plus a pre-warmed pool of generic instances claimed instead
+    of cold-booting, and snapshot-based function install (restoring a
+    previously-seen function into a runtime skips re-registration cost).
 
 Outputs: memory-over-time samples, per-request latencies (queue + startup +
 duration), cold-start counts, active runtime ("microVM") counts.
@@ -52,6 +57,12 @@ class SimParams:
     vm_boot_s: float = 0.125           # Firecracker microVM boot
     retry_backoff_s: float = 0.05      # queue retry when machine is full
     max_wait_s: float = 30.0           # give up queueing after this
+    # platform layer (hydra-pool model only)
+    pool_size: int = 4                 # pre-warmed generic runtime instances
+    pool_claim_s: float = 0.002        # claim a warm instance from the pool
+    pool_refill_s: float = 1.0         # background re-warm after a claim
+    snapshot_restore_s: float = 0.004  # install a snapshotted fn (vs
+                                       # fn_register_s for a first install)
 
 
 @dataclass(frozen=True)
@@ -63,10 +74,13 @@ class Invocation:
     mem_bytes: int
 
 
-def gen_trace(n_functions: int = 40, n_tenants: int = 8,
-              duration_s: float = 600.0, mean_rps: float = 6.0,
+def gen_trace(n_functions: int = 120, n_tenants: int = 40,
+              duration_s: float = 1800.0, mean_rps: float = 3.0,
               seed: int = 0) -> list:
-    """Synthetic Azure-like trace (Shahrad et al. statistics)."""
+    """Synthetic Azure-like trace (Shahrad et al. statistics): many owners,
+    most of them sparse — rare tenants idle past the keep-alive window, so
+    per-tenant runtimes churn (the cold-start regime the platform's
+    pre-warmed pool targets)."""
     rng = np.random.default_rng(seed)
     # Zipf popularity over functions; functions assigned to tenants
     pop = 1.0 / np.arange(1, n_functions + 1) ** 1.1
@@ -77,8 +91,14 @@ def gen_trace(n_functions: int = 40, n_tenants: int = 8,
                      64, 512) * MB
     out = []
     t = 0.0
+    # heavy-tailed inter-arrival (Shahrad et al.: bursty traffic): a
+    # hyperexponential mix of short within-burst gaps and long idle gaps,
+    # with the same mean as a Poisson process at ``mean_rps``
+    burst_frac, burst_scale = 0.7, 0.1
+    idle_scale = (1.0 - burst_frac * burst_scale) / (1.0 - burst_frac)
     while t < duration_s:
-        t += rng.exponential(1.0 / mean_rps)
+        scale = burst_scale if rng.random() < burst_frac else idle_scale
+        t += rng.exponential(scale / mean_rps)
         fid = int(rng.choice(n_functions, p=pop))
         dur = float(np.clip(rng.lognormal(math.log(0.35), 0.7), 0.1, 3.0))
         out.append(Invocation(t=t, fid=fid, tenant=int(tenant_of[fid]),
@@ -96,6 +116,7 @@ class _RuntimeInst:
     live_mem: int = 0
     live_invocations: int = 0
     last_active: float = 0.0
+    ready_at: float = 0.0          # boot completes at this time
     warm_isolates: dict = field(default_factory=dict)  # mem -> (count, t)
     functions_loaded: set = field(default_factory=set)
 
@@ -119,6 +140,7 @@ class SimResult:
     warm_isolate_starts: int = 0
     evicted_runtimes: int = 0
     dropped: int = 0
+    pool_claims: int = 0           # warm platform-pool instance claims
 
     def p(self, q) -> float:
         return float(np.percentile(self.latencies, q)) if self.latencies else float("nan")
@@ -145,30 +167,44 @@ class SimResult:
             "cold_isolate": self.cold_isolate_starts,
             "warm_isolate": self.warm_isolate_starts,
             "dropped": self.dropped,
+            "pool_claims": self.pool_claims,
         }
+
+
+MODELS = ("openwhisk", "photons", "hydra", "hydra-pool")
 
 
 def simulate(trace: list, model: str, params: SimParams = SimParams(),
              sample_dt: float = 1.0) -> SimResult:
-    """Replay ``trace`` under ``model`` in {openwhisk, photons, hydra}."""
-    assert model in ("openwhisk", "photons", "hydra"), model
+    """Replay ``trace`` under ``model`` in MODELS."""
+    assert model in MODELS, model
     p = params
     res = SimResult(model=model)
     insts: dict[tuple, list] = {}     # group key -> [_RuntimeInst]
     events: list = []                  # (t, seq, kind, payload)
     seq = 0
+    hydra_like = model in ("hydra", "hydra-pool")
+    # platform pool: generic warm instances, claimed instead of cold-booting
+    pool = {"avail": p.pool_size if model == "hydra-pool" else 0}
+    seen_fids: set = set()            # fns with a snapshot somewhere
+
+    def pool_mem() -> int:
+        return pool["avail"] * base_mem
 
     def total_mem() -> int:
-        return sum(r.mem() for group in insts.values() for r in group)
+        return sum(r.mem() for group in insts.values()
+                   for r in group) + pool_mem()
 
     def n_runtimes() -> int:
-        return sum(len(g) for g in insts.values())
+        return sum(len(g) for g in insts.values()) + pool["avail"]
 
     def group_key(inv: Invocation) -> tuple:
+        if model == "hydra-pool":
+            return ()                  # colocate across owners AND functions
         return (inv.tenant,) if model == "hydra" else (inv.fid,)
 
-    base_mem = p.hydra_runtime_base if model == "hydra" else p.runtime_base
-    runtime_cold = (p.hydra_runtime_cold_s if model == "hydra"
+    base_mem = p.hydra_runtime_base if hydra_like else p.runtime_base
+    runtime_cold = (p.hydra_runtime_cold_s if hydra_like
                     else p.runtime_cold_s)
 
     for inv in trace:
@@ -206,6 +242,18 @@ def simulate(trace: list, model: str, params: SimParams = SimParams(),
                 inst.warm_isolates[mem] = (0, last)
             continue
 
+        if kind == "refill":
+            # background re-warm of a claimed pool slot (off the request
+            # path). No machine headroom right now -> retry later rather
+            # than dropping the slot, like a real re-warmer would.
+            if pool["avail"] < p.pool_size:
+                if total_mem() + base_mem <= p.machine_cap:
+                    pool["avail"] += 1
+                else:
+                    heapq.heappush(events, (t + p.pool_refill_s,
+                                            seq := seq + 1, "refill", None))
+            continue
+
         if kind == "expire":
             key = payload
             group = insts.get(key, [])
@@ -239,19 +287,24 @@ def simulate(trace: list, model: str, params: SimParams = SimParams(),
                     break
 
         if inst is None:
-            # new runtime instance (microVM boot + runtime cold start) if
-            # the machine has room; under pressure, LRU-evict idle runtimes
-            # first (platforms reclaim keep-alive workers); else queue with
-            # backoff (a real platform would spill to another node)
-            if total_mem() + base_mem + need > p.machine_cap:
+            # new runtime instance: claim a pre-warmed pool slot (platform
+            # layer) when available, else microVM boot + runtime cold start
+            # — if the machine has room; under pressure, LRU-evict idle
+            # runtimes first (platforms reclaim keep-alive workers); else
+            # queue with backoff (a real platform would spill to another
+            # node). A pool claim adds no net base memory: the slot's RSS
+            # is already counted in total_mem().
+            claim_pool = model == "hydra-pool" and pool["avail"] > 0
+            extra = need if claim_pool else base_mem + need
+            if total_mem() + extra > p.machine_cap:
                 idle = sorted((r for g in insts.values() for r in g
                                if r.live_invocations == 0),
                               key=lambda r: r.last_active)
-                while idle and total_mem() + base_mem + need > p.machine_cap:
+                while idle and total_mem() + extra > p.machine_cap:
                     victim = idle.pop(0)
                     insts[victim.key[:-1]].remove(victim)
                     res.evicted_runtimes += 1
-            if total_mem() + base_mem + need > p.machine_cap:
+            if total_mem() + extra > p.machine_cap:
                 if t - orig_t >= p.max_wait_s:
                     res.dropped += 1
                 else:
@@ -265,14 +318,33 @@ def simulate(trace: list, model: str, params: SimParams = SimParams(),
             group.append(inst)
             if model == "openwhisk":
                 inst.live_mem = inv.mem_bytes  # worker-resident fn memory
-            startup += p.vm_boot_s + runtime_cold
-            res.cold_runtime_starts += 1
+            if claim_pool:
+                pool["avail"] -= 1
+                startup += p.pool_claim_s
+                res.pool_claims += 1
+                heapq.heappush(events, (t + p.pool_refill_s,
+                                        seq := seq + 1, "refill", None))
+            else:
+                startup += p.vm_boot_s + runtime_cold
+                res.cold_runtime_starts += 1
+            inst.ready_at = t + startup
+        else:
+            # joining an instance that may still be booting: the invocation
+            # waits for the remaining boot time (cold-start amplification
+            # under bursts — a warm pool instance is ready ~immediately)
+            startup += max(0.0, inst.ready_at - t)
 
         # per-runtime code install (hydra/photons: first time this fid is
-        # loaded into this runtime; shared code caches amortize the rest)
+        # loaded into this runtime; shared code caches amortize the rest).
+        # The platform layer restores later installs from the function's
+        # sandbox snapshot instead of a full re-register/recompile.
         if model != "openwhisk" and inv.fid not in inst.functions_loaded:
             inst.functions_loaded.add(inv.fid)
-            startup += p.fn_register_s
+            if model == "hydra-pool" and inv.fid in seen_fids:
+                startup += p.snapshot_restore_s
+            else:
+                startup += p.fn_register_s
+            seen_fids.add(inv.fid)
 
         # isolate acquire
         if model == "openwhisk":
@@ -305,5 +377,10 @@ def simulate(trace: list, model: str, params: SimParams = SimParams(),
 
 
 def compare(trace: list, params: SimParams = SimParams()) -> dict:
-    return {m: simulate(trace, m, params).summary()
-            for m in ("openwhisk", "photons", "hydra")}
+    return {m: simulate(trace, m, params).summary() for m in MODELS}
+
+
+if __name__ == "__main__":
+    import json
+    summaries = compare(gen_trace())
+    print(json.dumps(summaries, indent=2))

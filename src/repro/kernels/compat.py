@@ -1,0 +1,13 @@
+"""Version-compat shims for Pallas TPU APIs.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` in newer
+releases; the pinned 0.4.x only has the TPU-prefixed name. Resolve once here
+so every kernel stays release-agnostic.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:
+    CompilerParams = pltpu.TPUCompilerParams

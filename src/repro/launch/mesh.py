@@ -4,22 +4,43 @@ from __future__ import annotations
 
 import jax
 
+# jax.sharding.AxisType (and make_mesh's axis_types kwarg) only exist in
+# newer JAX releases; the pinned 0.4.x has neither. All axes default to
+# Auto there anyway, so omitting the kwarg is semantically identical.
+AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    if AXIS_TYPE is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(AXIS_TYPE.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def make_abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` across the signature change: newer JAX
+    takes ``(shape, names)``; 0.4.x takes one ``((name, size), ...)`` tuple."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_shapes),
+                                         tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_shapes)))
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     data = min(data, n // model) or 1
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e-like hardware model (per chip) for the roofline analysis

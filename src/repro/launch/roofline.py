@@ -211,6 +211,8 @@ def analyze(compiled, n_devices: int, *, scale: float = 1.0) -> Roofline:
     microbatch step to the full gradient-accumulation step).
     """
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):       # JAX 0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     text = compiled.as_text()
     flops = float(ca.get("flops", 0.0)) * scale
     raw_bytes = float(ca.get("bytes accessed", 0.0))

@@ -1,11 +1,16 @@
-"""Multi-tenant serving driver: HydraRuntime + continuous batching.
+"""Multi-tenant serving driver: HydraPlatform/HydraRuntime + continuous
+batching.
 
-Registers N tenant functions (optionally different architectures) in ONE
-runtime, replays a synthetic request stream, and reports density metrics:
-cold/warm starts, executable-cache sharing, arena-pool behaviour, latency.
+Registers N tenant functions (optionally different architectures) and
+replays a synthetic request stream, reporting density metrics: cold/warm
+starts, executable-cache sharing, arena-pool behaviour, latency.
+
+By default requests are served through a ``HydraPlatform`` — a fleet of
+runtimes behind a pre-warmed instance pool with colocation-aware placement
+and snapshot/restore (``--pool 0`` falls back to a single raw runtime):
 
   PYTHONPATH=src python -m repro.launch.serve --archs qwen2.5-3b,mamba2-780m \\
-      --tenants 4 --requests 32 --slots 4
+      --tenants 4 --requests 32 --slots 4 --pool 2
 """
 from __future__ import annotations
 
@@ -17,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import HydraRuntime, LMSpec
+from repro.core import HydraPlatform, HydraRuntime, LMSpec
 from repro.core.scheduler import ContinuousBatcher
 from repro.models.programs import ModelProgram
 
@@ -39,9 +44,29 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pool", type=int, default=2,
+                    help="pre-warmed platform pool size (0 = raw runtime)")
+    ap.add_argument("--runtime-budget-gb", type=float, default=8.0)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="enable sandbox snapshot/restore under this dir")
     args = ap.parse_args(argv)
 
-    rt = HydraRuntime(memory_budget_bytes=8 << 30)
+    budget = int(args.runtime_budget_gb * (1 << 30))
+    platform = None
+    if args.pool > 0:
+        platform = HydraPlatform(pool_size=args.pool,
+                                 runtime_budget_bytes=budget,
+                                 snapshot_dir=args.snapshot_dir)
+        # eager: place + AOT-compile at registration so t_reg measures the
+        # real install cost and no request pays a cold start
+        register = lambda fid, spec, tenant: platform.register_function(
+            fid, spec, tenant=tenant, eager=True)
+        runtime_for = platform.runtime_for
+    else:
+        rt = HydraRuntime(memory_budget_bytes=budget)
+        register = rt.register_function
+        runtime_for = lambda fid: rt
+
     archs = args.archs.split(",")
     rng = np.random.default_rng(0)
 
@@ -55,13 +80,16 @@ def main(argv=None):
         spec = LMSpec(cfg=cfg, params=make_params(cfg, seed=t),
                       max_seq=args.max_seq, slots=args.slots)
         fid = f"tenant{t}/{arch}"
-        rt.register_function(fid, spec, tenant=f"tenant{t}")
+        register(fid, spec, tenant=f"tenant{t}")
         fids.append(fid)
     t_reg = time.perf_counter() - t0
-    print(f"[serve] registered {len(fids)} functions in {t_reg:.1f}s "
-          f"(exe cache: {rt.exe_cache.stats()})")
 
-    batchers = {fid: ContinuousBatcher(rt, fid) for fid in fids}
+    batchers = {fid: ContinuousBatcher(runtime_for(fid), fid)
+                for fid in fids}
+    exe_stats = (platform or batchers[fids[0]].rt).exe_cache.stats()
+    print(f"[serve] registered {len(fids)} functions in {t_reg:.1f}s "
+          f"(exe cache: {exe_stats})")
+
     futs = []
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -84,12 +112,21 @@ def main(argv=None):
 
     print(f"[serve] {args.requests} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s)")
-    print(f"[serve] arena stats: {rt.arena_pool.stats()}")
-    print(f"[serve] exe cache: {rt.exe_cache.stats()}")
-    s = rt.stats()
-    print(f"[serve] budget used {s['budget_used']/2**20:.0f} MB "
-          f"(peak {s['budget_peak']/2**20:.0f} MB)")
-    rt.shutdown()
+    if platform is not None:
+        s = platform.stats()
+        print(f"[serve] platform: {s['runtimes_active']} active runtimes, "
+              f"{s['runtimes_pooled']} pooled, placement {platform.placement()}")
+        print(f"[serve] platform metrics: {s['metrics']['counters']}")
+        print(f"[serve] exe cache: {s['exe_cache']}")
+        print(f"[serve] budget used {s['budget_used']/2**20:.0f} MB")
+        platform.shutdown()
+    else:
+        s = rt.stats()
+        print(f"[serve] arena stats: {rt.arena_pool.stats()}")
+        print(f"[serve] exe cache: {rt.exe_cache.stats()}")
+        print(f"[serve] budget used {s['budget_used']/2**20:.0f} MB "
+              f"(peak {s['budget_peak']/2**20:.0f} MB)")
+        rt.shutdown()
     return s
 
 

@@ -4,6 +4,10 @@ import threading
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -139,7 +143,8 @@ def test_tracesim_invariants(seed):
     trace = gen_trace(n_functions=20, n_tenants=4, duration_s=60,
                       mean_rps=4.0, seed=seed)
     assert all(t.duration_s >= 0.1 for t in trace)
-    for model in ("openwhisk", "photons", "hydra"):
+    from repro.core.tracesim import MODELS
+    for model in MODELS:
         res = simulate(trace, model, SimParams())
         served = len(res.latencies) + res.dropped
         assert served == len(trace)

@@ -10,14 +10,14 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
+from repro.launch.mesh import make_mesh
 from repro.launch.sharding import (AxisRules, default_rules, logical_spec,
                                    param_specs, use_rules)
 from repro.models import transformer as tf
 
 
 def mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_param_rules_no_duplicate_axes():
@@ -43,7 +43,8 @@ def test_param_rules_no_duplicate_axes():
 def test_kv_replicated_when_heads_not_divisible():
     """gemma3 has 1 KV head: its wk/wv must be replicated under TP-16
     (production mesh geometry via AbstractMesh — no devices needed)."""
-    m = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    m = make_abstract_mesh((16, 16), ("data", "model"))
     cfg = get_config("gemma3-1b")
     params = jax.eval_shape(
         lambda: tf.init_params(jax.random.PRNGKey(0), cfg))
@@ -76,14 +77,14 @@ SUBPROC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json, dataclasses
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import make_mesh
     from repro.launch.sharding import default_rules, named_sharding_tree, use_rules
     from repro.launch.roofline import analyze
     from repro.models.programs import ModelProgram
     from repro.configs import get_config
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = get_config("qwen2.5-3b").reduced()
     prog = ModelProgram(cfg, remat=False, unroll=True)
     rules = default_rules(mesh, fsdp=True)

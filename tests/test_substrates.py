@@ -76,8 +76,8 @@ def test_async_checkpointer_gc(tmp_path):
 
 def test_elastic_restore_placement(tmp_path):
     """Restore re-places leaves via shardings (elastic mesh change)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     tree = {"w": jnp.arange(16, dtype=jnp.float32)}
     ckpt.save(str(tmp_path), 0, tree)
