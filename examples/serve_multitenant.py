@@ -1,6 +1,8 @@
 """End-to-end driver: multi-tenant, multi-architecture LM serving through
-the HydraPlatform — a pre-warmed runtime pool with colocation-aware
-placement — with continuous batching per function.
+the Hydra stack — first a single-node ``HydraPlatform`` (pre-warmed
+runtime pool, colocation-aware placement), then a two-node
+``HydraCluster`` (cross-node placement + adaptive pools) — with
+continuous batching per function.
 
   PYTHONPATH=src python examples/serve_multitenant.py
 """
@@ -13,6 +15,12 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     with tempfile.TemporaryDirectory() as snap_dir:
+        print("=== single-node HydraPlatform ===")
         main(["--archs", "qwen2.5-3b,mamba2-780m", "--tenants", "4",
               "--requests", "24", "--slots", "4", "--max-new", "12",
               "--pool", "2", "--snapshot-dir", snap_dir])
+    with tempfile.TemporaryDirectory() as snap_dir:
+        print("=== two-node HydraCluster ===")
+        main(["--archs", "qwen2.5-3b,mamba2-780m", "--tenants", "4",
+              "--requests", "24", "--slots", "4", "--max-new", "12",
+              "--nodes", "2", "--pool", "1", "--snapshot-dir", snap_dir])

@@ -1,6 +1,7 @@
 """Reproduce the paper's Azure-trace experiment (Figures 9/10):
 memory-over-time and latency percentiles for OpenWhisk / Photons / Hydra
-runtime models on a synthetic Shahrad-calibrated trace.
+runtime models on a synthetic Shahrad-calibrated trace, plus the
+multi-node cluster layer vs a statically partitioned fleet.
 
   PYTHONPATH=src python examples/trace_replay.py
 """
@@ -10,7 +11,8 @@ sys.path.insert(0, ".")
 
 import numpy as np
 
-from repro.core.tracesim import SimParams, gen_trace, simulate
+from repro.core.tracesim import (GB, MB, SimParams, gen_trace, simulate,
+                                 simulate_partitioned)
 
 
 def sparkline(samples, width=60):
@@ -56,6 +58,20 @@ def main():
           f"{hy['cold_runtime']}, p99 -"
           f"{1e3*(hy['p99_s']-hp['p99_s']):.1f}ms, memory -"
           f"{100*(1-hp['mean_mem_mb']/hy['mean_mem_mb']):.0f}%")
+
+    # cluster layer under fleet pressure (budgets scaled with the trace —
+    # see docs/benchmarks.md): 4-node cluster vs 4 independent
+    # statically-partitioned hydra-pool nodes at equal aggregate memory
+    fp = SimParams(n_nodes=4, runtime_cap=192 * MB, machine_cap=3 * GB)
+    cl = simulate(trace, "hydra-cluster", fp)
+    st = simulate_partitioned(trace, 4, fp)
+    print(f"\n== hydra-cluster (4 nodes, 3 GB fleet)")
+    print(f"   mem  {sparkline(cl.mem_samples)}")
+    print(f"cluster vs static partition: cold starts "
+          f"{cl.cold_runtime_starts} vs {st.cold_runtime_starts}, "
+          f"p99 {cl.p(99):.3f}s vs {st.p(99):.3f}s, ops/GB-sec "
+          f"{cl.ops_per_gb_s():.2f} vs {st.ops_per_gb_s():.2f}, "
+          f"snapshot transfers {cl.transfers}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,8 @@ byte-accurate budgets. See DESIGN.md for the paper-concept mapping.
 """
 from repro.core.arena import Arena, ArenaPool, tree_bytes
 from repro.core.budget import MemoryBudget
+from repro.core.cluster import (AdaptivePoolPolicy, ArrivalRateEstimator,
+                                ClusterParams, HydraCluster)
 from repro.core.errors import (AdmissionError, FunctionNotRegisteredError,
                                HydraError, HydraOOMError)
 from repro.core.executable_cache import ExecutableCache
@@ -17,7 +19,8 @@ from repro.core.scheduler import ContinuousBatcher, TokenBucket
 __all__ = [
     "Arena", "ArenaPool", "tree_bytes", "MemoryBudget", "ExecutableCache",
     "CallableSpec", "Function", "FunctionRegistry", "LMSpec", "HydraRuntime",
-    "HydraPlatform", "PlatformParams",
+    "HydraPlatform", "PlatformParams", "HydraCluster", "ClusterParams",
+    "AdaptivePoolPolicy", "ArrivalRateEstimator",
     "ContinuousBatcher", "TokenBucket", "HydraError", "HydraOOMError",
     "FunctionNotRegisteredError", "AdmissionError",
 ]

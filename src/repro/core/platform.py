@@ -19,7 +19,30 @@ and drives density (paper §4: 2.41x density, 21-44% memory reduction):
     on-disk executables), so restore re-registration is a pure cache hit.
 
 All runtimes share one ExecutableCache: code-cache sharing spans the fleet,
-not just tenants within a runtime.
+not just tenants within a runtime. A ``HydraCluster``
+(``repro.core.cluster``) composes N of these platforms — one per machine —
+and adds cross-node placement, snapshot migration, and adaptive pool
+sizing; the hooks it uses live here: an injectable ``exe_cache`` (so the
+whole fleet, not just one node, shares compiled executables),
+``resize_pool`` (the adaptive policy retargets the warm pool), and
+``export_function``/``import_function`` (detach a function's portable
+record on one node and adopt it on another).
+
+``PlatformParams`` fields:
+
+  * ``pool_size`` — target number of pre-warmed generic runtimes kept
+    ready; ``resize_pool`` retargets it at runtime (adaptive sizing).
+  * ``runtime_budget_bytes`` — per-runtime memory budget (paper: 2 GB);
+    placement packs functions into a runtime until this saturates.
+  * ``max_runtimes`` — node-level cap on simultaneous runtimes (pooled +
+    active); beyond it placement fails (a cluster spills to another node).
+  * ``arena_ttl_s`` / ``n_workers`` / ``janitor`` — passed through to each
+    ``HydraRuntime`` (isolate pool TTL, worker threads, TTL evictor).
+  * ``refill`` — re-warm the pool on a background thread after a claim.
+  * ``snapshot_dir`` — enables sandbox snapshot/evict/restore under this
+    directory; required for eviction-with-snapshot and migration.
+  * ``persist_executables`` — also persist compiled executables under
+    ``snapshot_dir`` so a re-booted platform restores with zero compiles.
 """
 from __future__ import annotations
 
@@ -83,13 +106,16 @@ class PlatformParams:
 class HydraPlatform:
     """Fleet manager: pool + placement + snapshot, one shared code cache."""
 
-    def __init__(self, params: Optional[PlatformParams] = None, **kw):
+    def __init__(self, params: Optional[PlatformParams] = None, *,
+                 exe_cache: Optional[ExecutableCache] = None, **kw):
         self.params = params or PlatformParams(**kw)
         p = self.params
-        persist = None
-        if p.snapshot_dir and p.persist_executables:
-            persist = os.path.join(p.snapshot_dir, "executables")
-        self.exe_cache = ExecutableCache(persist_dir=persist)
+        if exe_cache is None:
+            persist = None
+            if p.snapshot_dir and p.persist_executables:
+                persist = os.path.join(p.snapshot_dir, "executables")
+            exe_cache = ExecutableCache(persist_dir=persist)
+        self.exe_cache = exe_cache
         self.metrics = Metrics()
         self._lock = threading.RLock()
         self._pool: list[HydraRuntime] = []
@@ -202,6 +228,34 @@ class HydraPlatform:
             rt.shutdown()
             self.metrics.inc("runtime.shutdowns")
 
+    def resize_pool(self, n: int, *, background: bool = True) -> None:
+        """Retarget the pre-warmed pool to ``n`` instances. Shrinking shuts
+        surplus pooled runtimes down immediately (releasing their memory);
+        growing tops the pool back up through ``prewarm`` — on a background
+        thread by default, so the request that triggered an adaptive grow
+        never waits on runtime boots. This is the knob the cluster's
+        adaptive sizing policy turns."""
+        n = max(0, int(n))
+        extra = []
+        with self._lock:
+            self.params.pool_size = n
+            while len(self._pool) > n:
+                extra.append(self._pool.pop())
+        for rt in extra:
+            rt.shutdown()
+            self.metrics.inc("runtime.shutdowns")
+        if extra:
+            self.metrics.inc("pool.shrink", len(extra))
+        if background:
+            t = threading.Thread(target=self.prewarm, daemon=True,
+                                 name="hydra-pool-resize")
+            t.start()
+            with self._lock:
+                self._refills = [x for x in self._refills
+                                 if x.is_alive()] + [t]
+        else:
+            self.prewarm()
+
     @property
     def pool_available(self) -> int:
         with self._lock:
@@ -306,6 +360,13 @@ class HydraPlatform:
         """The runtime hosting ``fid`` (placing it first if needed)."""
         return self._ensure_placed(self._record(fid))
 
+    def function_records(self) -> list:
+        """Point-in-time snapshot of this node's function records, safe
+        to iterate while registrations proceed (cluster placement and
+        rebalancing read these)."""
+        with self._lock:
+            return list(self._records.values())
+
     def placement(self) -> dict:
         """fid -> runtime index (active runtimes only), for introspection."""
         with self._lock:
@@ -406,6 +467,53 @@ class HydraPlatform:
                 self.metrics.inc("restores")
         if eager:
             self._ensure_placed(rec)
+
+    # ------------------------------------------------------------------
+    # Migration hooks (used by HydraCluster to move a sandbox off-node)
+    # ------------------------------------------------------------------
+    def export_function(self, fid: str) -> dict:
+        """Evict ``fid`` (snapshotting it first) and detach its portable
+        record from this platform. The returned dict plus the on-disk
+        snapshot are everything another node needs to ``import_function``
+        and restore it — the cluster's cross-machine migration path."""
+        rec = self._record(fid)
+        self.evict(fid, snapshot=True)
+        if rec.snapshot_path is None:
+            # previously evicted without a snapshot: nothing to carry over
+            # — refuse BEFORE detaching so the record is not orphaned
+            raise HydraError(f"{fid}: cannot export without a snapshot")
+        with self._lock:
+            del self._records[fid]
+        self.metrics.inc("exports")
+        return {"fid": rec.fid, "spec": rec.spec, "tenant": rec.tenant,
+                "mem_budget": rec.mem_budget, "need_bytes": rec.need_bytes,
+                "params_spec": rec.params_spec,
+                "invocations": rec.invocations,
+                "snapshot_path": rec.snapshot_path}
+
+    def import_function(self, exported: dict,
+                        snapshot_path: Optional[str] = None) -> None:
+        """Adopt a record produced by another platform's
+        ``export_function``. The function arrives evicted; ``restore``
+        (or the next cluster-level restore) brings it live from the
+        snapshot — which must already sit under THIS node's reachable
+        path (``snapshot_path`` overrides the exported one after a copy)."""
+        path = snapshot_path or exported["snapshot_path"]
+        if path is None:
+            raise HydraError(f"{exported['fid']}: cannot import without a "
+                             "snapshot")
+        rec = _FunctionRecord(
+            fid=exported["fid"], spec=exported["spec"],
+            tenant=exported["tenant"], mem_budget=exported["mem_budget"],
+            need_bytes=exported["need_bytes"],
+            params_spec=exported["params_spec"],
+            invocations=exported["invocations"],
+            snapshot_path=path, evicted=True)
+        with self._lock:
+            if rec.fid in self._records:
+                raise HydraError(f"{rec.fid}: already known to this node")
+            self._records[rec.fid] = rec
+        self.metrics.inc("imports")
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:

@@ -1,16 +1,30 @@
-"""Multi-tenant serving driver: HydraPlatform/HydraRuntime + continuous
-batching.
+"""Multi-tenant serving driver: HydraCluster/HydraPlatform/HydraRuntime +
+continuous batching.
 
 Registers N tenant functions (optionally different architectures) and
 replays a synthetic request stream, reporting density metrics: cold/warm
 starts, executable-cache sharing, arena-pool behaviour, latency.
 
-By default requests are served through a ``HydraPlatform`` — a fleet of
-runtimes behind a pre-warmed instance pool with colocation-aware placement
-and snapshot/restore (``--pool 0`` falls back to a single raw runtime):
+Serving stack is selected by flags:
+
+  * ``--nodes K`` (K >= 2) — a ``HydraCluster`` of K single-machine
+    platforms: colocation-aware cross-node placement, snapshot migration,
+    and EWMA-adaptive per-node pre-warmed pools.
+  * ``--pool N`` (default 2, with ``--nodes`` < 2) — one ``HydraPlatform``:
+    a pre-warmed instance pool of N generic runtimes with colocation-aware
+    placement and snapshot/restore.
+  * ``--pool 0`` — a single raw ``HydraRuntime`` (no platform layer).
+
+Other knobs: ``--runtime-budget-gb`` caps each runtime's memory budget,
+``--node-memory-gb`` caps each cluster node's placement budget, and
+``--snapshot-dir`` enables sandbox snapshot/evict/restore (and is required
+for cluster migration).
 
   PYTHONPATH=src python -m repro.launch.serve --archs qwen2.5-3b,mamba2-780m \\
       --tenants 4 --requests 32 --slots 4 --pool 2
+
+  PYTHONPATH=src python -m repro.launch.serve --tenants 4 --requests 16 \\
+      --nodes 2 --pool 1
 """
 from __future__ import annotations
 
@@ -22,7 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import HydraPlatform, HydraRuntime, LMSpec
+from repro.core import (ClusterParams, HydraCluster, HydraPlatform,
+                        HydraRuntime, LMSpec, PlatformParams)
 from repro.core.scheduler import ContinuousBatcher
 from repro.models.programs import ModelProgram
 
@@ -46,19 +61,34 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--pool", type=int, default=2,
                     help="pre-warmed platform pool size (0 = raw runtime)")
+    ap.add_argument("--nodes", type=int, default=0,
+                    help="serve through a HydraCluster of this many nodes "
+                         "(< 2 = single-node platform/runtime)")
     ap.add_argument("--runtime-budget-gb", type=float, default=8.0)
+    ap.add_argument("--node-memory-gb", type=float, default=16.0,
+                    help="per-node placement budget (cluster mode)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="enable sandbox snapshot/restore under this dir")
     args = ap.parse_args(argv)
 
     budget = int(args.runtime_budget_gb * (1 << 30))
     platform = None
-    if args.pool > 0:
+    if args.nodes >= 2:
+        platform = HydraCluster(ClusterParams(
+            n_nodes=args.nodes,
+            node_memory_bytes=int(args.node_memory_gb * (1 << 30)),
+            snapshot_dir=args.snapshot_dir,
+            platform=PlatformParams(pool_size=max(args.pool, 1),
+                                    runtime_budget_bytes=budget)))
+        # eager: place + AOT-compile at registration so t_reg measures the
+        # real install cost and no request pays a cold start
+        register = lambda fid, spec, tenant: platform.register_function(
+            fid, spec, tenant=tenant, eager=True)
+        runtime_for = platform.runtime_for
+    elif args.pool > 0:
         platform = HydraPlatform(pool_size=args.pool,
                                  runtime_budget_bytes=budget,
                                  snapshot_dir=args.snapshot_dir)
-        # eager: place + AOT-compile at registration so t_reg measures the
-        # real install cost and no request pays a cold start
         register = lambda fid, spec, tenant: platform.register_function(
             fid, spec, tenant=tenant, eager=True)
         runtime_for = platform.runtime_for
@@ -95,6 +125,10 @@ def main(argv=None):
     for i in range(args.requests):
         fid = fids[int(rng.integers(len(fids)))]
         prompt = rng.integers(2, 100, args.prompt_len).tolist()
+        if isinstance(platform, HydraCluster):
+            # batchers talk to runtimes directly; tell the cluster about
+            # the arrival so adaptive pool sizing sees the load
+            platform.observe_arrival(fid)
         futs.append((time.perf_counter(),
                      batchers[fid].submit(prompt, args.max_new)))
         # interleave stepping: every submit, run a couple of ticks on all
@@ -112,7 +146,18 @@ def main(argv=None):
 
     print(f"[serve] {args.requests} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s)")
-    if platform is not None:
+    if isinstance(platform, HydraCluster):
+        s = platform.stats()
+        for i, ns in enumerate(s["nodes"]):
+            print(f"[serve] node{i}: {ns['runtimes_active']} active, "
+                  f"{ns['runtimes_pooled']} pooled (target "
+                  f"{ns['pool_target']}), committed "
+                  f"{ns['committed_bytes']/2**20:.1f} MB")
+        print(f"[serve] cluster placement: {platform.placement()}")
+        print(f"[serve] cluster metrics: {s['metrics']['counters']}")
+        print(f"[serve] exe cache: {s['exe_cache']}")
+        platform.shutdown()
+    elif platform is not None:
         s = platform.stats()
         print(f"[serve] platform: {s['runtimes_active']} active runtimes, "
               f"{s['runtimes_pooled']} pooled, placement {platform.placement()}")

@@ -1,0 +1,281 @@
+"""HydraCluster behaviour: cross-node colocation + spill, snapshot
+migration with explicit transfer cost, rebalancing, EWMA-adaptive pool
+sizing, and the hydra-cluster tracesim model beating a statically
+partitioned hydra-pool fleet."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (AdaptivePoolPolicy, ArrivalRateEstimator,
+                        CallableSpec, ClusterParams, HydraCluster,
+                        HydraOOMError, PlatformParams)
+from repro.core.platform import estimate_bytes
+from repro.core.tracesim import (SimParams, gen_trace, simulate,
+                                 simulate_partitioned)
+
+MB = 1 << 20
+GB = 1 << 30
+
+
+def spec(name="affine", arena_bytes=1 * MB):
+    def fn(params, args):
+        return {"y": args["x"] * params["w"] + 1.0}
+    return CallableSpec(name=name, fn=fn,
+                        example_args={"x": jnp.ones((64,), jnp.float32)},
+                        params={"w": jnp.full((64,), 2.0)},
+                        arena_bytes=arena_bytes)
+
+
+ARGS = {"x": jnp.full((64,), 3.0)}
+
+
+def make_cluster(tmp_path=None, **kw):
+    defaults = dict(
+        n_nodes=2,
+        node_memory_bytes=64 * MB,
+        snapshot_dir=str(tmp_path) if tmp_path is not None else None,
+        platform=PlatformParams(pool_size=1,
+                                runtime_budget_bytes=32 * MB))
+    defaults.update(kw)
+    return HydraCluster(ClusterParams(**defaults))
+
+
+# ---------------------------------------------------------------------------
+# Placement: colocation + spill
+# ---------------------------------------------------------------------------
+def test_colocation_then_spill_across_nodes():
+    need = estimate_bytes(spec())
+    # each node fits exactly two functions' placement estimates
+    cl = make_cluster(node_memory_bytes=2 * need + need // 2)
+    try:
+        # same tenant colocates on one node while it fits
+        cl.register_function("t0/a", spec("a"), tenant="t0")
+        cl.register_function("t0/b", spec("b"), tenant="t0")
+        place = cl.placement()
+        assert place["t0/a"] == place["t0/b"]
+        # the tenant's node is full: the third function spills to the other
+        cl.register_function("t0/c", spec("c"), tenant="t0")
+        assert cl.placement()["t0/c"] != place["t0/a"]
+        assert cl.metrics.counters["place.colocated"] == 1
+        assert cl.metrics.counters["place.spill"] == 1
+        # a different tenant lands on the least-committed node
+        cl.register_function("t1/a", spec("a"), tenant="t1")
+        assert cl.placement()["t1/a"] == cl.placement()["t0/c"]
+        # fleet full: admission fails rather than OOMing a node
+        with pytest.raises(HydraOOMError):
+            cl.register_function("t2/a", spec("a"), tenant="t2")
+    finally:
+        cl.shutdown()
+
+
+def test_invoke_routes_to_owning_node():
+    cl = make_cluster()
+    try:
+        cl.register_function("t0/f", spec(), tenant="t0")
+        cl.register_function("t1/f", spec(), tenant="t1")
+        out0 = cl.invoke("t0/f", ARGS)
+        out1 = cl.invoke("t1/f", ARGS)
+        assert float(out0["y"][0]) == float(out1["y"][0]) == 7.0
+        # different tenants started on different (least-committed) nodes
+        assert cl.placement()["t0/f"] != cl.placement()["t1/f"]
+    finally:
+        cl.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Migration + rebalance
+# ---------------------------------------------------------------------------
+def test_migrate_roundtrip_zero_recompile(tmp_path):
+    cl = make_cluster(tmp_path)
+    try:
+        cl.register_function("t0/f", spec(), tenant="t0")
+        before = cl.invoke("t0/f", ARGS)
+        src = cl.placement()["t0/f"]
+        dst = 1 - src
+        compiles = cl.exe_cache.stats()["compiles"]
+        nbytes = cl.migrate("t0/f", dst)
+        assert nbytes > 0
+        assert cl.placement()["t0/f"] == dst
+        after = cl.invoke("t0/f", ARGS)
+        assert float(after["y"][0]) == float(before["y"][0])
+        # fleet-shared ExecutableCache: the migrated function re-registers
+        # on its new node with ZERO new compilations
+        assert cl.exe_cache.stats()["compiles"] == compiles
+        c = cl.metrics.counters
+        assert c["migrations"] == 1
+        assert c["transfer_bytes"] == nbytes
+        # the explicit cross-node transfer cost was charged
+        assert cl.metrics.hists["transfer_s"].count == 1
+        assert cl.metrics.hists["transfer_s"].mean > 0
+    finally:
+        cl.shutdown()
+
+
+def test_failed_migrate_does_not_orphan_function():
+    cl = make_cluster()                   # no snapshot_dir: migration fails
+    try:
+        cl.register_function("t0/f", spec(), tenant="t0")
+        cl.invoke("t0/f", ARGS)
+        src = cl.placement()["t0/f"]
+        with pytest.raises(Exception):
+            cl.migrate("t0/f", 1 - src)
+        # the function survives the failed migration on its source node
+        assert cl.placement()["t0/f"] == src
+        out = cl.invoke("t0/f", ARGS)
+        assert float(out["y"][0]) == 7.0
+    finally:
+        cl.shutdown()
+
+
+def test_rebalance_drains_overloaded_node(tmp_path):
+    need = estimate_bytes(spec())
+    cl = make_cluster(tmp_path, node_memory_bytes=8 * need)
+    try:
+        # all one tenant: colocation piles everything onto one node
+        for i in range(4):
+            cl.register_function(f"t0/f{i}", spec(f"f{i}"), tenant="t0")
+        nodes = set(cl.placement().values())
+        assert len(nodes) == 1
+        moves = cl.rebalance()
+        assert len(moves) == 2            # 4|0 -> 2|2
+        committed = [n.committed for n in cl.nodes]
+        assert max(committed) - min(committed) <= need
+        # a rebalanced (evicted) function restores lazily on next invoke
+        moved_fid = moves[0][0]
+        out = cl.invoke(moved_fid, ARGS)
+        assert float(out["y"][0]) == 7.0
+    finally:
+        cl.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive pool sizing
+# ---------------------------------------------------------------------------
+def test_arrival_rate_estimator_tracks_burst_and_idle():
+    est = ArrivalRateEstimator(alpha=0.5)
+    assert est.rate() == 0.0
+    for i in range(20):                    # 100 arrivals/s burst
+        est.observe(i * 0.01)
+    burst_rate = est.rate()
+    assert burst_rate > 50
+    # idle: the estimate decays with the time since the last arrival
+    assert est.rate(now=0.2 + 10.0) < 1.0
+
+
+def test_adaptive_policy_grows_shrinks_and_respects_memory():
+    pol = AdaptivePoolPolicy(pool_min=1, pool_max=8, cover_s=1.0,
+                             runtime_bytes=2 * GB)
+    assert pol.target(0.0) == 1            # idle floor
+    assert pol.target(3.5) == 4            # ceil(rate * cover)
+    assert pol.target(100.0) == 8          # burst ceiling
+    # the memory budget caps the target below pool_min if it must
+    assert pol.target(100.0, free_bytes=5 * GB) == 2
+    assert pol.target(100.0, free_bytes=0) == 0
+
+
+def test_cluster_adaptive_pool_grows_on_burst_shrinks_idle():
+    cl = make_cluster(
+        n_nodes=1, node_memory_bytes=256 * MB,
+        pool_min=1, pool_max=3, resize_every=1, ewma_alpha=0.5,
+        pool_cover_s=1.0,
+        platform=PlatformParams(pool_size=1, runtime_budget_bytes=8 * MB,
+                                refill=False))
+    try:
+        cl.register_function("t0/f", spec(), tenant="t0")
+        # burst: 100 arrivals/s -> EWMA rate >> pool_max -> pool grows
+        t = 0.0
+        for _ in range(8):
+            cl.invoke("t0/f", ARGS, now=t)
+            t += 0.01
+        node = cl.nodes[0]
+        assert node.platform.params.pool_size == 3
+        # the pooled commitment never exceeds the node's free memory
+        free = cl.params.node_memory_bytes - node.committed
+        assert (node.platform.params.pool_size
+                * cl.params.platform.runtime_budget_bytes) <= free
+        # idle: next arrival is 100 s later -> rate collapses -> floor
+        cl.invoke("t0/f", ARGS, now=t + 100.0)
+        assert node.platform.params.pool_size == cl.params.pool_min
+    finally:
+        cl.shutdown()
+
+
+def test_cluster_adaptive_pool_capped_by_node_memory():
+    need = estimate_bytes(spec())
+    # tiny node: after committing one function there is room for only one
+    # 8 MB pooled runtime no matter how hot the arrival rate gets
+    cl = make_cluster(
+        n_nodes=1, node_memory_bytes=need + 12 * MB,
+        pool_min=1, pool_max=8, resize_every=1, ewma_alpha=0.5,
+        pool_cover_s=10.0,
+        platform=PlatformParams(pool_size=1, runtime_budget_bytes=8 * MB,
+                                refill=False))
+    try:
+        cl.register_function("t0/f", spec(), tenant="t0")
+        t = 0.0
+        for _ in range(8):
+            cl.invoke("t0/f", ARGS, now=t)
+            t += 0.001
+        node = cl.nodes[0]
+        assert node.platform.params.pool_size == 1   # memory-capped, not 8
+    finally:
+        cl.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Tracesim: the hydra-cluster model
+# ---------------------------------------------------------------------------
+def fleet_params(**kw):
+    """Fleet-pressure regime: trace and budgets scaled together (see
+    bench_trace) so pool churn matches the paper's ratios."""
+    base = dict(n_nodes=4, runtime_cap=192 * MB, machine_cap=3 * GB)
+    base.update(kw)
+    return SimParams(**base)
+
+
+def test_tracesim_cluster_beats_static_partition():
+    """Acceptance: at 4 nodes on the default Azure-sparse trace, the
+    cluster layer strictly reduces total cold starts AND fleet p99 vs 4
+    independent hydra-pool nodes with statically partitioned traffic and
+    the same aggregate memory."""
+    trace = gen_trace()
+    p = fleet_params()
+    cluster = simulate(trace, "hydra-cluster", p)
+    static = simulate_partitioned(trace, 4, p)
+    assert cluster.cold_runtime_starts < static.cold_runtime_starts
+    assert cluster.p(99) < static.p(99)
+    # cross-machine placement also lifts density at equal fleet memory
+    assert cluster.ops_per_gb_s() > static.ops_per_gb_s()
+    assert cluster.transfers > 0          # snapshots moved between nodes
+
+
+def test_tracesim_adaptive_pool_peak_within_fixed_baseline():
+    """Acceptance: adaptive sizing never holds more pooled memory at peak
+    than the fixed-pool_size policy, and holds strictly less on average."""
+    trace = gen_trace()
+    adaptive = simulate(trace, "hydra-cluster", fleet_params())
+    fixed = simulate(trace, "hydra-cluster",
+                     fleet_params(adaptive_pool=False))
+    assert adaptive.peak_pool_mem <= fixed.peak_pool_mem
+    assert adaptive.mean_pool_mem() < fixed.mean_pool_mem()
+
+
+def test_tracesim_cluster_conservation_and_summary():
+    trace = gen_trace(n_functions=20, n_tenants=4, duration_s=60.0,
+                      mean_rps=4.0)
+    s = simulate(trace, "hydra-cluster", SimParams(n_nodes=2)).summary()
+    assert s["requests"] + s["dropped"] == len(trace)
+    assert s["n_nodes"] == 2
+    assert s["peak_pool_mem_mb"] >= 0
+    # node_cap defaults to an even split: fleet total stays machine_cap
+    assert s["peak_mem_mb"] <= SimParams().machine_cap / MB
+
+
+def test_tracesim_node_cap_defaults_to_even_split():
+    trace = gen_trace(n_functions=20, n_tenants=4, duration_s=60.0,
+                      mean_rps=4.0)
+    implicit = simulate(trace, "hydra-cluster",
+                        SimParams(n_nodes=4, machine_cap=2 * GB))
+    explicit = simulate(trace, "hydra-cluster",
+                        SimParams(n_nodes=4, machine_cap=2 * GB,
+                                  node_cap=2 * GB // 4))
+    assert implicit.summary() == explicit.summary()
