@@ -1,9 +1,27 @@
-"""Fig 9 + Fig 10 analog: Azure-like trace replay — RSS-over-time and
+"""Fig 9 + Fig 10 analog: Azure trace replay — RSS-over-time and
 end-to-end latency CDF for OpenWhisk / Photons / Hydra runtime models,
 plus the HydraPlatform layer (``hydra-pool``: pre-warmed instance pool,
 cross-tenant colocation, snapshot-based function install) and the
 HydraCluster layer (``hydra-cluster``: cross-machine placement + spill,
 snapshot transfer, adaptive per-node pools).
+
+Two workloads:
+
+  * the synthetic Shahrad-calibrated trace (``gen_trace``) — the
+    paper-headline comparisons and the 1-8 node cluster sweep;
+  * a real Azure Functions 2019-format trace (``--trace-file``; the
+    tiny ``benchmarks/data/azure_sample.csv`` ships in-repo for CI) —
+    replayed across ALL registered models at fleet pressure, with
+    density (ops/GB-sec) ordering hydra-cluster >= hydra-pool >= hydra
+    reported as ``trace.azure.density_ordering``.
+
+``--calibration cal.json`` overrides the paper's startup/memory
+constants with values measured on this host by
+``bench_startup --emit-calibration`` (see ``repro.core.calibrate``).
+
+  PYTHONPATH=src python benchmarks/bench_trace.py \\
+      --trace-file benchmarks/data/azure_sample.csv \\
+      --calibration benchmarks/data/calibration_example.json
 
 Paper headlines to validate: Hydra cuts memory ~83% and p99 tail ~68% vs
 OpenWhisk and beats Photons on both; the platform layer then eliminates
@@ -20,16 +38,85 @@ idle.
 """
 from __future__ import annotations
 
-from repro.core.tracesim import (MB, GB, SimParams, compare, gen_trace,
-                                 simulate, simulate_partitioned)
+import argparse
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from repro.core.calibrate import apply_calibration
+from repro.core.tracesim import (GB, MB, MODELS, SimParams, Trace, compare,
+                                 discover_azure_tables, gen_trace, simulate,
+                                 simulate_partitioned)
 
 # scaled-down fleet-pressure regime for the multi-node rows (see module
 # docstring); the fleet total stays constant as the node count sweeps
 FLEET_PARAMS = dict(runtime_cap=192 * MB, machine_cap=3 * GB)
 NODE_SWEEP = (1, 2, 4, 8)
 
+# azure-replay regime: same fleet pressure; the single-node fixed pool is
+# sized for the fleet's peak warm capacity (pool_size = n_nodes *
+# pool_max) while the cluster's EWMA policy floats between pool_min and
+# pool_max per node — the ROADMAP's adaptive-vs-fixed-at-equal-peak
+# methodology
+AZURE_PARAMS = dict(runtime_cap=192 * MB, machine_cap=3 * GB, n_nodes=4,
+                    pool_size=8, pool_min=1, pool_max=2)
 
-def run() -> list:
+DATA_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data")
+AZURE_SAMPLE = os.path.join(DATA_DIR, "azure_sample.csv")
+
+
+def load_trace_file(path: str, durations: str = None, memory: str = None,
+                    target_rps: float = None, max_minutes: int = None,
+                    seed: int = 0) -> Trace:
+    """Load an Azure-format trace; sibling ``<stem>_durations.csv`` /
+    ``<stem>_memory.csv`` tables are auto-discovered when not given."""
+    found = discover_azure_tables(path)
+    durations = durations or found.get("durations_csv")
+    memory = memory or found.get("memory_csv")
+    return Trace.from_azure(path, durations_csv=durations,
+                            memory_csv=memory, target_rps=target_rps,
+                            max_minutes=max_minutes, seed=seed)
+
+
+def azure_rows(trace: Trace, params: SimParams, models=None) -> list:
+    """Replay an Azure-format trace across ``models`` (default: all)."""
+    res = compare(trace, params, models=models)
+    d = trace.describe()
+    rows = [{
+        "name": "trace.azure.workload",
+        "us_per_call": 0.0,
+        "derived": (f"invocations={d['invocations']};"
+                    f"fns={d['functions']};tenants={d['tenants']};"
+                    f"rps={d['mean_rps']:.2f};"
+                    f"thinning_keep={d.get('thinning_keep', 1.0):.3f}"),
+    }]
+    for model, s in res.items():
+        rows.append({
+            "name": f"trace.azure.{model}",
+            "us_per_call": s["p99_s"] * 1e6,
+            "derived": (f"requests={s['requests']};"
+                        f"ops_per_gb_s={s['ops_per_gb_s']:.3f};"
+                        f"mean_mem_mb={s['mean_mem_mb']:.0f};"
+                        f"cold_rt={s['cold_runtime']};"
+                        f"pool_claims={s['pool_claims']};"
+                        f"transfers={s['transfers']};"
+                        f"dropped={s['dropped']}"),
+        })
+    if all(m in res for m in ("hydra", "hydra-pool", "hydra-cluster")):
+        hy, hp, hc = (res[m]["ops_per_gb_s"]
+                      for m in ("hydra", "hydra-pool", "hydra-cluster"))
+        rows.append({
+            "name": "trace.azure.density_ordering",
+            "us_per_call": 0.0,
+            "derived": (f"cluster={hc:.3f}>=pool={hp:.3f}>=hydra={hy:.3f};"
+                        f"holds={hc >= hp >= hy}"),
+        })
+    return rows
+
+
+def synthetic_rows() -> list:
     trace = gen_trace()
     res = compare(trace)
     rows = []
@@ -112,3 +199,96 @@ def run() -> list:
                     f"cold_rt={cl['cold_runtime']}_vs_{fx['cold_runtime']}"),
     })
     return rows
+
+
+def azure_section(trace_file: str, calibration: str = None,
+                  durations: str = None, memory: str = None,
+                  target_rps: float = None, max_minutes: int = None,
+                  seed: int = 0, models=None) -> list:
+    """One azure-replay section: fleet-pressure params (optionally
+    calibrated), trace load, rows — shared by run() and the CLI."""
+    params = SimParams(**AZURE_PARAMS)
+    if calibration:
+        params = apply_calibration(params, calibration)
+    trace = load_trace_file(trace_file, durations=durations, memory=memory,
+                            target_rps=target_rps, max_minutes=max_minutes,
+                            seed=seed)
+    return azure_rows(trace, params, models=models)
+
+
+def run(trace_file: str = AZURE_SAMPLE, calibration: str = None) -> list:
+    """Driver entry point (benchmarks/run.py): synthetic sections plus —
+    when the bundled sample (or ``trace_file``) exists — the azure-replay
+    section."""
+    rows = synthetic_rows()
+    if trace_file and os.path.exists(trace_file):
+        rows += azure_section(trace_file, calibration)
+    return rows
+
+
+def validate_rows(rows: list) -> list:
+    """Sanity gate for CI (sim-smoke): NaN metrics or a replay that
+    served zero invocations are failures, not output."""
+    errors = []
+    if not rows:
+        return ["no benchmark rows produced"]
+    for row in rows:
+        if not math.isfinite(row["us_per_call"]):
+            errors.append(f"{row['name']}: non-finite us_per_call")
+        for pair in row["derived"].split(";"):
+            key, _, val = pair.partition("=")
+            if any(tok in ("nan", "-nan", "inf", "-inf")
+                   for tok in val.lower().split("_")):
+                errors.append(f"{row['name']}: non-finite {key}={val}")
+            if key in ("requests", "invocations") and val == "0":
+                errors.append(f"{row['name']}: zero invocations replayed")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-file", default=AZURE_SAMPLE,
+                    help="Azure Functions 2019-format invocations CSV "
+                         "(default: the bundled sample)")
+    ap.add_argument("--durations", default=None,
+                    help="durations percentile CSV (default: "
+                         "<trace>_durations.csv when present)")
+    ap.add_argument("--memory", default=None,
+                    help="app memory percentile CSV (default: "
+                         "<trace>_memory.csv when present)")
+    ap.add_argument("--calibration", default=None,
+                    help="hydra-calibration/v1 JSON from bench_startup "
+                         "--emit-calibration")
+    ap.add_argument("--target-rps", type=float, default=None,
+                    help="deterministically thin the trace to this mean "
+                         "rps (seeded binomial per function-minute)")
+    ap.add_argument("--max-minutes", type=int, default=None,
+                    help="replay only the first N minutes of the trace")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="thinning/expansion seed")
+    ap.add_argument("--models", default=None,
+                    help=f"comma-separated subset of {list(MODELS)}")
+    ap.add_argument("--synthetic", action="store_true",
+                    help="also run the synthetic-trace sections")
+    args = ap.parse_args(argv)
+
+    rows = azure_section(
+        args.trace_file, calibration=args.calibration,
+        durations=args.durations, memory=args.memory,
+        target_rps=args.target_rps, max_minutes=args.max_minutes,
+        seed=args.seed,
+        models=args.models.split(",") if args.models else None)
+    if args.synthetic:
+        rows += synthetic_rows()
+
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    errors = validate_rows(rows)
+    for e in errors:
+        print(f"# FAIL {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,13 +1,18 @@
 """Reproduce the paper's Azure-trace experiment (Figures 9/10):
 memory-over-time and latency percentiles for OpenWhisk / Photons / Hydra
 runtime models on a synthetic Shahrad-calibrated trace, plus the
-multi-node cluster layer vs a statically partitioned fleet.
+multi-node cluster layer vs a statically partitioned fleet, plus a
+replay of a real Azure Functions 2019-format trace (the bundled
+``benchmarks/data/azure_sample.csv`` by default).
 
-  PYTHONPATH=src python examples/trace_replay.py
+  PYTHONPATH=src python examples/trace_replay.py [azure_trace.csv]
 """
+import os
 import sys
 
 sys.path.insert(0, ".")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                ".."))
 
 import numpy as np
 
@@ -72,6 +77,27 @@ def main():
           f"p99 {cl.p(99):.3f}s vs {st.p(99):.3f}s, ops/GB-sec "
           f"{cl.ops_per_gb_s():.2f} vs {st.ops_per_gb_s():.2f}, "
           f"snapshot transfers {cl.transfers}")
+
+    # real Azure Functions 2019-format replay (bundled sample, or any
+    # trace passed on the command line); sibling durations/memory tables
+    # are auto-discovered by bench_trace's loader
+    from benchmarks.bench_trace import (AZURE_PARAMS, AZURE_SAMPLE,
+                                        load_trace_file)
+    path = sys.argv[1] if len(sys.argv) > 1 else AZURE_SAMPLE
+    if not os.path.exists(path):
+        if len(sys.argv) > 1:
+            sys.exit(f"trace file not found: {path}")
+        return                         # bundled sample absent: skip leg
+    azure = load_trace_file(path)
+    print(f"\n== azure replay: {azure.describe()}")
+    # the fleet-pressure, adaptive-vs-fixed-at-equal-peak regime that
+    # bench_trace's azure rows use
+    ap = SimParams(**AZURE_PARAMS)
+    for model in ("hydra", "hydra-pool", "hydra-cluster"):
+        r = simulate(azure, model, ap)
+        print(f"   {model:14s} ops/GB-sec={r.ops_per_gb_s():.2f} "
+              f"mean_mem={r.mean_mem()/MB:.0f}MB "
+              f"cold_rt={r.cold_runtime_starts} p99={r.p(99):.3f}s")
 
 
 if __name__ == "__main__":

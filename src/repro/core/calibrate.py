@@ -1,0 +1,96 @@
+"""Measured-cost calibration for the simulator.
+
+``SimParams`` startup/memory constants default to the paper's
+measurements. This module replaces them with values measured on *your*
+host: ``benchmarks/bench_startup.py --emit-calibration out.json`` runs
+the Fig-1 measurements and writes a calibration JSON; ``bench_trace
+--calibration out.json`` (or :func:`apply_calibration` directly) then
+replays traces with the measured constants, so simulated density/latency
+deltas reflect this machine rather than the paper's testbed.
+``repro.launch.serve --calibration`` emits the same schema from live
+serving metrics.
+
+Schema (``hydra-calibration/v1``)::
+
+    {
+      "schema": "hydra-calibration/v1",
+      "meta": {"host": "...", "source": "bench_startup"},
+      "measured": {"hydra_runtime_cold_s": 0.041, ...}
+    }
+
+``measured`` keys must be :data:`CALIBRATABLE_FIELDS` — the ``SimParams``
+fields a measurement can override. Unknown keys or non-numeric values
+are schema errors (raise ``ValueError``), so a stale file fails loudly
+instead of silently mis-calibrating a replay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Optional, Union
+
+from repro.core.sim.engine import SimParams
+
+SCHEMA = "hydra-calibration/v1"
+
+# SimParams fields a measurement may override; int fields get rounded.
+CALIBRATABLE_FIELDS: tuple = (
+    "runtime_cold_s", "hydra_runtime_cold_s", "isolate_cold_s",
+    "isolate_warm_s", "fn_register_s", "vm_boot_s", "pool_claim_s",
+    "snapshot_restore_s", "runtime_base", "hydra_runtime_base",
+    "isolate_base",
+)
+_INT_FIELDS = frozenset(("runtime_base", "hydra_runtime_base",
+                         "isolate_base"))
+
+
+def _validate(measured: dict) -> dict:
+    if not isinstance(measured, dict) or not measured:
+        raise ValueError("calibration 'measured' must be a non-empty dict")
+    unknown = sorted(set(measured) - set(CALIBRATABLE_FIELDS))
+    if unknown:
+        raise ValueError(
+            f"calibration has unknown field(s) {unknown}; calibratable "
+            f"SimParams fields are {sorted(CALIBRATABLE_FIELDS)}")
+    out = {}
+    for k, v in measured.items():
+        if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                or not math.isfinite(v) or v < 0:
+            raise ValueError(f"calibration field {k!r} must be a finite "
+                             f"non-negative number, got {v!r}")
+        out[k] = int(round(v)) if k in _INT_FIELDS else float(v)
+    return out
+
+
+def write_calibration(path: str, measured: dict,
+                      meta: Optional[dict] = None) -> dict:
+    """Validate ``measured`` and write the calibration JSON; returns the
+    document written."""
+    doc = {"schema": SCHEMA, "meta": dict(meta or {}),
+           "measured": _validate(measured)}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def load_calibration(path: str) -> dict:
+    """Read + validate a calibration JSON; returns the ``measured`` dict
+    (field -> value)."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or doc.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: not a {SCHEMA} document "
+                         f"(schema={doc.get('schema') if isinstance(doc, dict) else None!r})")
+    return _validate(doc.get("measured", {}))
+
+
+def apply_calibration(params: SimParams,
+                      calibration: Union[str, dict]) -> SimParams:
+    """Return a copy of ``params`` with measured constants overriding the
+    paper defaults. ``calibration`` is a path to a calibration JSON or an
+    already-loaded ``measured`` dict."""
+    measured = load_calibration(calibration) \
+        if isinstance(calibration, str) else _validate(calibration)
+    return dataclasses.replace(params, **measured)

@@ -141,10 +141,13 @@ class HydraCluster:
         self._lock = threading.RLock()
         self.exe_cache = None
         if p.share_exe_cache:
-            # the fleet-wide cache honours the platform template's opt-in
-            # to on-disk executable persistence (a per-node cache would)
+            # the fleet-wide cache persists to disk whenever the cluster
+            # has a snapshot root, unless the platform template explicitly
+            # opted out (persist_executables=False) — matching the
+            # platform-level default of zero-recompile restores across
+            # boots
             persist = None
-            if p.snapshot_dir and p.platform.persist_executables:
+            if p.snapshot_dir and p.platform.persist_executables is not False:
                 persist = os.path.join(p.snapshot_dir, "executables")
             self.exe_cache = ExecutableCache(persist_dir=persist)
         self.nodes: list[_NodeState] = []

@@ -43,6 +43,8 @@ record on one node and adopt it on another).
     directory; required for eviction-with-snapshot and migration.
   * ``persist_executables`` — also persist compiled executables under
     ``snapshot_dir`` so a re-booted platform restores with zero compiles.
+    Defaults to ON whenever ``snapshot_dir`` is set (pass False to opt
+    out) — the ROADMAP "snapshot warm-path".
 """
 from __future__ import annotations
 
@@ -100,7 +102,15 @@ class PlatformParams:
     janitor: bool = True                      # per-runtime arena TTL evictor
     refill: bool = True                       # top pool back up after claim
     snapshot_dir: Optional[str] = None        # enables snapshot/restore
-    persist_executables: bool = False         # share exe cache across boots
+    # share the exe cache across platform boots; None = auto (ON whenever
+    # snapshot_dir is set, so snapshot restore is zero-recompile across
+    # boots by default). Pass False to opt out explicitly.
+    persist_executables: Optional[bool] = None
+
+    def persist_executables_on(self) -> bool:
+        if self.persist_executables is None:
+            return bool(self.snapshot_dir)
+        return self.persist_executables
 
 
 class HydraPlatform:
@@ -112,7 +122,7 @@ class HydraPlatform:
         p = self.params
         if exe_cache is None:
             persist = None
-            if p.snapshot_dir and p.persist_executables:
+            if p.snapshot_dir and p.persist_executables_on():
                 persist = os.path.join(p.snapshot_dir, "executables")
             exe_cache = ExecutableCache(persist_dir=persist)
         self.exe_cache = exe_cache

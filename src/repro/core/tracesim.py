@@ -1,629 +1,26 @@
-"""Azure-trace reproduction (paper §4.4, Figures 9/10) — now fleet-scale.
+"""Back-compat facade for the discrete-event simulator.
 
-A discrete-event simulator replays a multi-function multi-tenant invocation
-trace under five runtime models:
+The monolith that used to live here is now the ``repro.core.sim``
+package (``engine.py`` — model-agnostic event loop; ``models.py`` — the
+``PlatformModel`` policy interface + ``MODELS`` registry) with its trace
+sources in ``repro.core.traces`` (synthetic generator + Azure Functions
+2019 loader) and measured-cost calibration in ``repro.core.calibrate``.
+Every public name keeps importing from here:
 
-  * ``openwhisk`` — one runtime per function instance, ONE invocation at a
-    time (classic FaaS worker); keep-alive TTL.
-  * ``photons``   — one runtime per function, MANY concurrent invocations
-    (virtualized single-function runtime).
-  * ``hydra``     — one runtime per TENANT hosting any of the tenant's
-    functions, many concurrent invocations, shared code caches; new runtime
-    instance when the 2 GB budget saturates (paper setup).
-  * ``hydra-pool`` — the HydraPlatform layer: colocation ACROSS tenants
-    (any runtime hosts any owner's functions, packed until the 2 GB budget
-    saturates) plus a pre-warmed pool of generic instances claimed instead
-    of cold-booting, and snapshot-based function install (restoring a
-    previously-seen function into a runtime skips re-registration cost).
-  * ``hydra-cluster`` — the HydraCluster layer: ``n_nodes`` machines, each
-    a hydra-pool node. Placement packs into already-running instances
-    fleet-wide (preferring the instance that already loaded the function,
-    then a node holding its snapshot, then the fullest instance) and
-    spills new instances to the least-loaded node. A function whose
-    snapshot lives only on another node pays an explicit cross-node
-    transfer cost (``snapshot_bytes`` at ``transfer_gbps``). Each node's
-    pre-warmed pool is sized adaptively by an EWMA arrival-rate estimator
-    (grow toward ``pool_max`` under bursts, shrink to ``pool_min`` when
-    idle, never past the node memory budget) instead of the fixed
-    ``pool_size``.
+    from repro.core.tracesim import SimParams, gen_trace, simulate
 
-Outputs: memory-over-time samples, per-request latencies (queue + startup +
-duration), cold-start counts, active runtime ("microVM") counts, snapshot
-transfers, peak pooled memory, and ops/GB-sec density.
-
-The trace itself is synthetic but calibrated to the Shahrad et al. '20
-characterization the paper uses: Zipf function popularity, heavy-tailed
-inter-arrival, durations 100 ms - 3 s, per-function memory 120-170 MB.
-Startup-cost constants default to the paper's measurements and can be
-overridden with values measured by our own benchmarks (bench_startup).
-
-``SimParams`` is documented field-by-field inline below; the cluster-only
-fields (``n_nodes`` .. ``pool_cover_s``) are ignored by the single-node
-models, which always run one node at the full ``machine_cap``.
+and ``python -m repro.core.tracesim`` still prints the five-model
+comparison on the default synthetic trace.
 """
 from __future__ import annotations
 
-import heapq
-import math
-from dataclasses import dataclass, field, replace
-from typing import Optional
+from repro.core.sim import *                  # noqa: F401,F403
+from repro.core.sim import Node, RuntimeInst, compare, gen_trace
+from repro.core.sim import __all__ as __all__  # single source of truth
 
-import numpy as np
-
-MB = 1 << 20
-GB = 1 << 30
-
-
-# ---------------------------------------------------------------------------
-@dataclass(frozen=True)
-class SimParams:
-    # startup costs (seconds) — paper Fig 1/8 scale
-    runtime_cold_s: float = 0.150      # native runtime boot (cold start)
-    hydra_runtime_cold_s: float = 0.046  # AOT-compiled runtime boot (2-3x faster)
-    isolate_cold_s: float = 0.0005     # isolate/arena allocation (<500 us)
-    isolate_warm_s: float = 0.00005    # pool hit
-    fn_register_s: float = 0.010       # per-function code install (hydra)
-    # memory model (bytes)
-    runtime_base: int = 30 * MB        # native runtime RSS
-    hydra_runtime_base: int = 46 * MB  # polyglot runtime RSS (paper Fig 5)
-    isolate_base: int = 1 * MB         # pre-allocated isolate heap
-    runtime_cap: int = 2 * GB          # per-runtime budget (hydra/photons)
-    machine_cap: int = 16 * GB         # FLEET budget (paper: 16 GB segment)
-    keepalive_s: float = 60.0          # worker keep-alive (openwhisk)
-    isolate_ttl_s: float = 10.0        # isolate pool TTL
-    vm_boot_s: float = 0.125           # Firecracker microVM boot
-    retry_backoff_s: float = 0.05      # queue retry when machine is full
-    max_wait_s: float = 30.0           # give up queueing after this
-    # platform layer (hydra-pool / hydra-cluster models)
-    pool_size: int = 4                 # pre-warmed instances (fixed policy)
-    pool_claim_s: float = 0.002        # claim a warm instance from the pool
-    pool_refill_s: float = 1.0         # background re-warm after a claim
-    snapshot_restore_s: float = 0.004  # install a snapshotted fn (vs
-                                       # fn_register_s for a first install)
-    pool_drain_ttl_s: float = 10.0     # an idle (empty) platform runtime
-                                       # drains back to the warm pool after
-                                       # this, like HydraPlatform's
-                                       # _return_runtime (0 disables)
-    # multi-node fleet (hydra-cluster model only)
-    n_nodes: int = 4                   # machines in the cluster
-    node_cap: Optional[int] = None     # per-node memory; default splits
-                                       # machine_cap evenly (fleet total
-                                       # stays constant across node counts)
-    transfer_gbps: float = 10.0        # cross-node snapshot bandwidth
-    snapshot_bytes: int = 24 * MB      # serialized sandbox snapshot size
-    adaptive_pool: bool = True         # EWMA-driven per-node pool sizing
-    pool_min: int = 2                  # adaptive pool floor (per node)
-    pool_max: Optional[int] = None     # adaptive ceiling; default pool_size
-    ewma_alpha: float = 0.5            # arrival-rate EWMA smoothing
-    pool_cover_s: float = 2.0          # arrivals one warm pool must absorb
-                                       # (≈ one cold-boot + refill window)
-
-
-@dataclass(frozen=True)
-class Invocation:
-    t: float
-    fid: int
-    tenant: int
-    duration_s: float
-    mem_bytes: int
-
-
-def gen_trace(n_functions: int = 120, n_tenants: int = 40,
-              duration_s: float = 1800.0, mean_rps: float = 3.0,
-              seed: int = 0) -> list:
-    """Synthetic Azure-like trace (Shahrad et al. statistics): many owners,
-    most of them sparse — rare tenants idle past the keep-alive window, so
-    per-tenant runtimes churn (the cold-start regime the platform's
-    pre-warmed pool targets)."""
-    rng = np.random.default_rng(seed)
-    # Zipf popularity over functions; functions assigned to tenants
-    pop = 1.0 / np.arange(1, n_functions + 1) ** 1.1
-    pop /= pop.sum()
-    tenant_of = rng.integers(0, n_tenants, n_functions)
-    # per-function memory: lognormal centered ~140 MB, clipped [64, 512] MB
-    fn_mem = np.clip(rng.lognormal(math.log(140), 0.35, n_functions),
-                     64, 512) * MB
-    out = []
-    t = 0.0
-    # heavy-tailed inter-arrival (Shahrad et al.: bursty traffic): a
-    # hyperexponential mix of short within-burst gaps and long idle gaps,
-    # with the same mean as a Poisson process at ``mean_rps``
-    burst_frac, burst_scale = 0.7, 0.1
-    idle_scale = (1.0 - burst_frac * burst_scale) / (1.0 - burst_frac)
-    while t < duration_s:
-        scale = burst_scale if rng.random() < burst_frac else idle_scale
-        t += rng.exponential(scale / mean_rps)
-        fid = int(rng.choice(n_functions, p=pop))
-        dur = float(np.clip(rng.lognormal(math.log(0.35), 0.7), 0.1, 3.0))
-        out.append(Invocation(t=t, fid=fid, tenant=int(tenant_of[fid]),
-                              duration_s=dur, mem_bytes=int(fn_mem[fid])))
-    return out
-
-
-# ---------------------------------------------------------------------------
-@dataclass
-class _RuntimeInst:
-    key: tuple                     # grouping key (fid | tenant, index)
-    base_mem: int
-    cap: int
-    isolate_base: int = MB
-    live_mem: int = 0
-    live_invocations: int = 0
-    last_active: float = 0.0
-    ready_at: float = 0.0          # boot completes at this time
-    warm_isolates: dict = field(default_factory=dict)  # mem -> (count, t)
-    functions_loaded: set = field(default_factory=set)
-
-    def mem(self) -> int:
-        # pooled isolates hold only their pre-allocated heap (~1 MB, paper
-        # Fig 3); an invocation's working memory is freed at completion
-        pool = sum(c for c, _ in self.warm_isolates.values()) \
-            * self.isolate_base
-        return self.base_mem + self.live_mem + pool
-
-
-@dataclass
-class _Node:
-    """One machine: its runtime instances, warm pool, snapshot store, and
-    (cluster model) EWMA arrival-rate state for adaptive pool sizing."""
-    idx: int
-    cap: int
-    insts: dict = field(default_factory=dict)  # group key -> [_RuntimeInst]
-    pool_avail: int = 0
-    pool_target: int = 0
-    pool_pending: int = 0          # refills scheduled but not landed
-    rate: float = 0.0              # EWMA arrivals/s
-    last_arrival: float = float("-inf")
-    snapshots: set = field(default_factory=set)  # fids snapshotted locally
-
-
-@dataclass
-class SimResult:
-    model: str
-    latencies: list = field(default_factory=list)
-    overheads: list = field(default_factory=list)  # latency - pure duration
-    mem_samples: list = field(default_factory=list)     # (t, bytes)
-    pool_mem_samples: list = field(default_factory=list)  # (t, bytes)
-    runtime_count_samples: list = field(default_factory=list)  # (t, n)
-    cold_runtime_starts: int = 0
-    cold_isolate_starts: int = 0
-    warm_isolate_starts: int = 0
-    evicted_runtimes: int = 0
-    dropped: int = 0
-    pool_claims: int = 0           # warm platform-pool instance claims
-    transfers: int = 0             # cross-node snapshot transfers
-    peak_pool_mem: int = 0         # max bytes held by warm pool slots
-    n_nodes: int = 1
-
-    def p(self, q) -> float:
-        return float(np.percentile(self.latencies, q)) if self.latencies else float("nan")
-
-    def mean_mem(self) -> float:
-        return float(np.mean([m for _, m in self.mem_samples]))
-
-    def mean_pool_mem(self) -> float:
-        if not self.pool_mem_samples:
-            return 0.0
-        return float(np.mean([m for _, m in self.pool_mem_samples]))
-
-    def mean_runtimes(self) -> float:
-        return float(np.mean([n for _, n in self.runtime_count_samples]))
-
-    def ops_per_gb_s(self) -> float:
-        """Density: completed invocations per GB-second of fleet footprint
-        (the paper's headline 2.41x metric)."""
-        if not self.mem_samples or not self.latencies:
-            return float("nan")
-        duration = self.mem_samples[-1][0]
-        gb = self.mean_mem() / GB
-        if duration <= 0 or gb <= 0:
-            return float("nan")
-        return len(self.latencies) / (gb * duration)
-
-    def summary(self) -> dict:
-        return {
-            "model": self.model,
-            "requests": len(self.latencies),
-            "p50_s": self.p(50), "p99_s": self.p(99),
-            "overhead_p99_ms": 1e3 * float(np.percentile(self.overheads, 99))
-            if self.overheads else float("nan"),
-            "mean_mem_mb": self.mean_mem() / MB,
-            "peak_mem_mb": max(m for _, m in self.mem_samples) / MB
-            if self.mem_samples else 0,
-            "mean_runtimes": self.mean_runtimes(),
-            "cold_runtime": self.cold_runtime_starts,
-            "evicted_runtimes": self.evicted_runtimes,
-            "cold_isolate": self.cold_isolate_starts,
-            "warm_isolate": self.warm_isolate_starts,
-            "dropped": self.dropped,
-            "pool_claims": self.pool_claims,
-            "transfers": self.transfers,
-            "peak_pool_mem_mb": self.peak_pool_mem / MB,
-            "mean_pool_mem_mb": self.mean_pool_mem() / MB,
-            "ops_per_gb_s": self.ops_per_gb_s(),
-            "n_nodes": self.n_nodes,
-        }
-
-
-MODELS = ("openwhisk", "photons", "hydra", "hydra-pool", "hydra-cluster")
-
-
-def simulate(trace: list, model: str, params: SimParams = SimParams(),
-             sample_dt: float = 1.0) -> SimResult:
-    """Replay ``trace`` under ``model`` in MODELS."""
-    assert model in MODELS, model
-    p = params
-    cluster = model == "hydra-cluster"
-    pooled = model in ("hydra-pool", "hydra-cluster")
-    hydra_like = model in ("hydra", "hydra-pool", "hydra-cluster")
-
-    base_mem = p.hydra_runtime_base if hydra_like else p.runtime_base
-    runtime_cold = (p.hydra_runtime_cold_s if hydra_like
-                    else p.runtime_cold_s)
-    n_nodes = max(1, p.n_nodes) if cluster else 1
-    node_cap = ((p.node_cap or p.machine_cap // n_nodes) if cluster
-                else p.machine_cap)
-    pool_max = p.pool_max if p.pool_max is not None else p.pool_size
-    transfer_s = p.snapshot_bytes / (p.transfer_gbps * 1e9 / 8)
-
-    res = SimResult(model=model, n_nodes=n_nodes)
-    nodes = [_Node(idx=i, cap=node_cap) for i in range(n_nodes)]
-    for nd in nodes:
-        if model == "hydra-pool":
-            nd.pool_avail = nd.pool_target = p.pool_size
-        elif cluster:
-            nd.pool_avail = nd.pool_target = (
-                p.pool_min if p.adaptive_pool else p.pool_size)
-
-    events: list = []                  # (t, seq, kind, payload)
-    seq = 0
-
-    def node_mem(nd: _Node) -> int:
-        return sum(r.mem() for g in nd.insts.values() for r in g) \
-            + nd.pool_avail * base_mem
-
-    def fleet_mem() -> int:
-        return sum(node_mem(nd) for nd in nodes)
-
-    def fleet_pool_mem() -> int:
-        return sum(nd.pool_avail for nd in nodes) * base_mem
-
-    def n_runtimes() -> int:
-        return sum(len(g) for nd in nodes for g in nd.insts.values()) \
-            + sum(nd.pool_avail for nd in nodes)
-
-    def group_key(inv: Invocation) -> tuple:
-        if pooled:
-            return ()                  # colocate across owners AND functions
-        return (inv.tenant,) if model == "hydra" else (inv.fid,)
-
-    def adapt_pool(nd: _Node, t: float) -> None:
-        """EWMA arrival-rate update + pool retarget (cluster model only):
-        grow toward pool_max under bursts, shrink to pool_min when idle,
-        and never let pooled slots outgrow the node's free memory."""
-        nonlocal seq
-        if not (cluster and p.adaptive_pool):
-            return
-        eff = nd.rate
-        if nd.last_arrival > float("-inf"):
-            gap = max(t - nd.last_arrival, 1e-9)
-            nd.rate = (1.0 - p.ewma_alpha) * nd.rate + p.ewma_alpha / gap
-            # cap by the latest gap: a long-idle node collapses to the
-            # floor immediately instead of riding its stale burst estimate
-            eff = min(nd.rate, 1.0 / gap)
-        nd.last_arrival = t
-        want = min(pool_max,
-                   max(p.pool_min, math.ceil(eff * p.pool_cover_s)))
-        busy = node_mem(nd) - nd.pool_avail * base_mem
-        want = min(want, max(0, (nd.cap - busy) // base_mem))
-        nd.pool_target = want
-        if nd.pool_avail > want:       # shrink releases memory immediately
-            nd.pool_avail = want
-        # growth is urgent (the estimator says a burst is on): back-boot
-        # a generic runtime rather than waiting a full re-warm period
-        grow_s = p.vm_boot_s + runtime_cold
-        while nd.pool_avail + nd.pool_pending < want:
-            nd.pool_pending += 1
-            heapq.heappush(events, (t + grow_s, seq := seq + 1,
-                                    "refill", nd))
-
-    for inv in trace:
-        heapq.heappush(events, (inv.t, seq := seq + 1, "arrive", (inv, inv.t)))
-
-    res.peak_pool_mem = fleet_pool_mem()
-    next_sample = 0.0
-    while events:
-        t, _, kind, payload = heapq.heappop(events)
-        while next_sample <= t:
-            res.mem_samples.append((next_sample, fleet_mem()))
-            res.pool_mem_samples.append((next_sample, fleet_pool_mem()))
-            res.runtime_count_samples.append((next_sample, n_runtimes()))
-            res.peak_pool_mem = max(res.peak_pool_mem, fleet_pool_mem())
-            next_sample += sample_dt
-
-        if kind == "done":
-            nd, inst, inv = payload
-            inst.live_invocations -= 1
-            inst.last_active = t
-            if model == "openwhisk":
-                # worker stays resident (runtime + function memory) until
-                # keep-alive expiry; no isolate pool semantics
-                pass
-            else:
-                inst.live_mem -= inv.mem_bytes + p.isolate_base
-                # return isolate to pool (evicted after TTL)
-                cnt, _ = inst.warm_isolates.get(inv.mem_bytes, (0, t))
-                inst.warm_isolates[inv.mem_bytes] = (cnt + 1, t)
-                heapq.heappush(events, (t + p.isolate_ttl_s, seq := seq + 1,
-                                        "evict", (inst, inv.mem_bytes)))
-                if (pooled and p.pool_drain_ttl_s > 0
-                        and inst.live_invocations == 0):
-                    heapq.heappush(events, (t + p.pool_drain_ttl_s,
-                                            seq := seq + 1, "drain",
-                                            (nd, inst)))
-            continue
-
-        if kind == "drain":
-            # HydraPlatform._return_runtime: an emptied runtime that stays
-            # idle past the TTL becomes a generic warm-pool slot again (or
-            # shuts down when the pool is already at target) — its loaded
-            # functions survive only as node-local snapshots
-            nd, inst = payload
-            group = nd.insts.get(inst.key[:-1], [])
-            if (inst in group and inst.live_invocations == 0
-                    and t - inst.last_active >= p.pool_drain_ttl_s - 1e-9):
-                group.remove(inst)
-                if nd.pool_avail < nd.pool_target:
-                    nd.pool_avail += 1
-                    res.peak_pool_mem = max(res.peak_pool_mem,
-                                            fleet_pool_mem())
-            continue
-
-        if kind == "evict":
-            inst, mem = payload
-            cnt, last = inst.warm_isolates.get(mem, (0, t))
-            if cnt > 0 and t - last >= p.isolate_ttl_s - 1e-9:
-                inst.warm_isolates[mem] = (0, last)
-            continue
-
-        if kind == "refill":
-            # background re-warm of a claimed pool slot (off the request
-            # path). No node headroom right now -> retry later rather
-            # than dropping the slot, like a real re-warmer would. An
-            # adaptively-shrunk target just drops the now-surplus slot.
-            nd = payload
-            nd.pool_pending = max(0, nd.pool_pending - 1)
-            if nd.pool_avail < nd.pool_target:
-                if node_mem(nd) + base_mem <= nd.cap:
-                    nd.pool_avail += 1
-                    res.peak_pool_mem = max(res.peak_pool_mem,
-                                            fleet_pool_mem())
-                else:
-                    nd.pool_pending += 1
-                    heapq.heappush(events, (t + p.pool_refill_s,
-                                            seq := seq + 1, "refill", nd))
-            continue
-
-        if kind == "expire":
-            nd, key = payload
-            group = nd.insts.get(key, [])
-            keep = [r for r in group
-                    if r.live_invocations > 0
-                    or t - r.last_active < p.keepalive_s - 1e-9]
-            nd.insts[key] = keep
-            continue
-
-        # ---- arrival (possibly a queued retry) ----
-        inv, orig_t = payload
-        startup = 0.0
-        need = inv.mem_bytes + p.isolate_base
-        key = group_key(inv)
-
-        nd = nodes[0]
-        inst = None
-        warm_worker = False
-        if model == "openwhisk":
-            # one invocation per worker: find an idle warm worker (its
-            # runtime + function memory are already resident)
-            for r in nd.insts.setdefault(key, []):
-                if r.live_invocations == 0:
-                    inst = r
-                    warm_worker = True
-                    break
-        elif not cluster:
-            for r in nd.insts.setdefault(key, []):
-                if r.mem() + need <= r.cap:
-                    inst = r
-                    break
-        else:
-            # fleet-wide packing: prefer the instance that already loaded
-            # this fid (zero install), then a node holding its snapshot
-            # (no transfer), then the fullest instance (pack-first keeps
-            # spare capacity drainable)
-            best = None
-            for cand_nd in nodes:
-                for r in cand_nd.insts.get((), []):
-                    if r.mem() + need > r.cap:
-                        continue
-                    score = (inv.fid in r.functions_loaded,
-                             inv.fid in cand_nd.snapshots, r.mem())
-                    if best is None or score > best[0]:
-                        best = (score, cand_nd, r)
-            if best is not None:
-                _, nd, inst = best
-
-        if inst is None:
-            # new runtime instance: claim a pre-warmed pool slot (platform
-            # layer) when available, else microVM boot + runtime cold start
-            # — if the node has room; under pressure, LRU-evict idle
-            # runtimes first (platforms reclaim keep-alive workers); else
-            # queue with backoff. The cluster picks the node: a warm pool
-            # slot on the least-loaded pooled node, else a cold boot on the
-            # least-loaded node (this is the cross-machine spill). A pool
-            # claim adds no net base memory: the slot's RSS is already
-            # counted in node_mem().
-            if cluster:
-                # a node "fits" if reclaiming its idle runtimes would make
-                # room (the eviction loop below does the reclaiming) —
-                # prefer a warm pool claim anywhere over a cold boot
-                def reclaimable(x: _Node) -> int:
-                    return sum(r.mem() for g in x.insts.values()
-                               for r in g if r.live_invocations == 0)
-                pool_fit = [x for x in nodes if x.pool_avail > 0
-                            and node_mem(x) - reclaimable(x) + need
-                            <= x.cap]
-                if pool_fit:
-                    nd = min(pool_fit, key=node_mem)
-                    claim_pool = True
-                else:
-                    cold_fit = [x for x in nodes
-                                if node_mem(x) - reclaimable(x)
-                                + base_mem + need <= x.cap]
-                    nd = min(cold_fit or nodes, key=node_mem)
-                    claim_pool = False
-            else:
-                claim_pool = model == "hydra-pool" and nd.pool_avail > 0
-            extra = need if claim_pool else base_mem + need
-            if node_mem(nd) + extra > nd.cap:
-                idle = sorted((r for g in nd.insts.values() for r in g
-                               if r.live_invocations == 0),
-                              key=lambda r: r.last_active)
-                while idle and node_mem(nd) + extra > nd.cap:
-                    victim = idle.pop(0)
-                    nd.insts[victim.key[:-1]].remove(victim)
-                    res.evicted_runtimes += 1
-            if node_mem(nd) + extra > nd.cap:
-                if t - orig_t >= p.max_wait_s:
-                    res.dropped += 1
-                else:
-                    heapq.heappush(events,
-                                   (t + p.retry_backoff_s, seq := seq + 1,
-                                    "arrive", (inv, orig_t)))
-                continue
-            group = nd.insts.setdefault(key, [])
-            cap = p.runtime_cap if model != "openwhisk" else base_mem + need
-            inst = _RuntimeInst(key=key + (len(group),), base_mem=base_mem,
-                                cap=cap, isolate_base=p.isolate_base)
-            group.append(inst)
-            if model == "openwhisk":
-                inst.live_mem = inv.mem_bytes  # worker-resident fn memory
-            if claim_pool:
-                nd.pool_avail -= 1
-                startup += p.pool_claim_s
-                res.pool_claims += 1
-                nd.pool_pending += 1
-                heapq.heappush(events, (t + p.pool_refill_s,
-                                        seq := seq + 1, "refill", nd))
-            else:
-                startup += p.vm_boot_s + runtime_cold
-                res.cold_runtime_starts += 1
-            inst.ready_at = t + startup
-        else:
-            # joining an instance that may still be booting: the invocation
-            # waits for the remaining boot time (cold-start amplification
-            # under bursts — a warm pool instance is ready ~immediately)
-            startup += max(0.0, inst.ready_at - t)
-
-        # the serving node observed an arrival: update its EWMA rate and
-        # retarget its warm pool (adaptive sizing, cluster model only)
-        adapt_pool(nd, t)
-
-        # per-runtime code install (hydra/photons: first time this fid is
-        # loaded into this runtime; shared code caches amortize the rest).
-        # The platform layer restores later installs from the function's
-        # sandbox snapshot instead of a full re-register/recompile; in the
-        # cluster, a snapshot held only by ANOTHER node is fetched first —
-        # the explicit cross-machine transfer cost.
-        if model != "openwhisk" and inv.fid not in inst.functions_loaded:
-            inst.functions_loaded.add(inv.fid)
-            if pooled and inv.fid in nd.snapshots:
-                startup += p.snapshot_restore_s
-            elif cluster and any(inv.fid in x.snapshots for x in nodes):
-                startup += p.snapshot_restore_s + transfer_s
-                res.transfers += 1
-            else:
-                startup += p.fn_register_s
-            nd.snapshots.add(inv.fid)
-
-        # isolate acquire
-        if model == "openwhisk":
-            if warm_worker:
-                res.warm_isolate_starts += 1
-            else:
-                res.cold_isolate_starts += 1
-        else:
-            cnt, _ = inst.warm_isolates.get(inv.mem_bytes, (0, 0.0))
-            if cnt > 0:
-                inst.warm_isolates[inv.mem_bytes] = (cnt - 1, t)
-                startup += p.isolate_warm_s
-                res.warm_isolate_starts += 1
-            else:
-                startup += p.isolate_cold_s
-                res.cold_isolate_starts += 1
-            inst.live_mem += need
-
-        inst.live_invocations += 1
-        inst.last_active = t
-        latency = (t - orig_t) + startup + inv.duration_s
-        res.latencies.append(latency)
-        res.overheads.append(latency - inv.duration_s)
-        heapq.heappush(events, (t + startup + inv.duration_s,
-                                seq := seq + 1, "done", (nd, inst, inv)))
-        heapq.heappush(events, (t + startup + inv.duration_s + p.keepalive_s,
-                                seq := seq + 1, "expire", (nd, key)))
-
-    return res
-
-
-def simulate_partitioned(trace: list, n_nodes: int,
-                         params: SimParams = SimParams(),
-                         model: str = "hydra-pool") -> SimResult:
-    """Baseline fleet WITHOUT a cluster layer: ``n_nodes`` independent
-    single-node deployments with statically partitioned traffic (functions
-    hashed across nodes) and a 1/n share of the fleet memory each. The
-    merged result is directly comparable to a ``hydra-cluster`` run at the
-    same node count — the delta is what cross-machine placement, spill,
-    and snapshot transfer buy."""
-    node_cap = params.node_cap or params.machine_cap // n_nodes
-    single = replace(params, machine_cap=node_cap, n_nodes=1)
-    merged = SimResult(model=f"{model}-static", n_nodes=n_nodes)
-    mem: dict[float, int] = {}
-    pmem: dict[float, int] = {}
-    cnt: dict[float, int] = {}
-    common_end = float("inf")     # nodes' sample grids end at different
-    for i in range(n_nodes):      # times; sums past the shortest would
-        sub = [inv for inv in trace  # cover only a subset of the fleet
-               if inv.fid % n_nodes == i]
-        r = simulate(sub, model, single)
-        if r.mem_samples:
-            common_end = min(common_end, r.mem_samples[-1][0])
-        merged.latencies += r.latencies
-        merged.overheads += r.overheads
-        merged.cold_runtime_starts += r.cold_runtime_starts
-        merged.cold_isolate_starts += r.cold_isolate_starts
-        merged.warm_isolate_starts += r.warm_isolate_starts
-        merged.evicted_runtimes += r.evicted_runtimes
-        merged.dropped += r.dropped
-        merged.pool_claims += r.pool_claims
-        merged.transfers += r.transfers
-        merged.peak_pool_mem += r.peak_pool_mem   # sum of per-node peaks
-        for ts, m in r.mem_samples:
-            mem[ts] = mem.get(ts, 0) + m
-        for ts, m in r.pool_mem_samples:
-            pmem[ts] = pmem.get(ts, 0) + m
-        for ts, n in r.runtime_count_samples:
-            cnt[ts] = cnt.get(ts, 0) + n
-    merged.mem_samples = sorted((ts, m) for ts, m in mem.items()
-                                if ts <= common_end)
-    merged.pool_mem_samples = sorted((ts, m) for ts, m in pmem.items()
-                                     if ts <= common_end)
-    merged.runtime_count_samples = sorted((ts, n) for ts, n in cnt.items()
-                                          if ts <= common_end)
-    return merged
-
-
-def compare(trace: list, params: SimParams = SimParams()) -> dict:
-    return {m: simulate(trace, m, params).summary() for m in MODELS}
+# old private names, kept for anything that poked at the internals
+_RuntimeInst = RuntimeInst
+_Node = Node
 
 
 if __name__ == "__main__":

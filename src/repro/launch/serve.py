@@ -69,6 +69,11 @@ def main(argv=None):
                     help="per-node placement budget (cluster mode)")
     ap.add_argument("--snapshot-dir", default=None,
                     help="enable sandbox snapshot/restore under this dir")
+    ap.add_argument("--calibration", default=None,
+                    help="after serving, write measured costs (runtime "
+                         "boot, register, restore) as a "
+                         "hydra-calibration/v1 JSON for the trace "
+                         "simulator (see bench_trace --calibration)")
     args = ap.parse_args(argv)
 
     budget = int(args.runtime_budget_gb * (1 << 30))
@@ -172,7 +177,52 @@ def main(argv=None):
         print(f"[serve] budget used {s['budget_used']/2**20:.0f} MB "
               f"(peak {s['budget_peak']/2**20:.0f} MB)")
         rt.shutdown()
+    if args.calibration:
+        # dedupe by identity: colocated fids share a runtime, and a
+        # duplicated runtime would bias the averaged costs toward it
+        rts = list({id(b.rt): b.rt for b in batchers.values()}.values())
+        emit_calibration(args.calibration, platform, rts)
     return s
+
+
+def emit_calibration(path, platform, runtimes) -> dict:
+    """Map live serving metrics onto the simulator's calibratable
+    ``SimParams`` fields and write a hydra-calibration/v1 JSON. Only
+    costs this run actually measured are emitted; the simulator keeps
+    its paper defaults for the rest."""
+    from repro.core.calibrate import write_calibration
+
+    def mean_of(hists, name):
+        vals = [h[name].mean for h in hists
+                if name in h and h[name].count > 0]
+        return float(np.mean(vals)) if vals else None
+
+    plat_hists = []
+    if platform is not None:
+        plat_hists.append(platform.metrics.hists)
+        # a cluster records boot/restore timings on each NODE's platform
+        # metrics, not on the cluster-level metrics object
+        for node in getattr(platform, "nodes", []):
+            plat_hists.append(node.platform.metrics.hists)
+    rt_hists = [rt.metrics.hists for rt in runtimes]
+    measured = {}
+    # arena.alloc_s is NOT mapped onto isolate_cold_s: a short serve run
+    # averages the first allocation's one-time jnp JIT into that
+    # histogram, inflating the per-event cost 10-100x — bench_startup
+    # measures the steady-state cold alloc instead
+    for field, value in (
+            ("hydra_runtime_cold_s", mean_of(plat_hists, "runtime_boot_s")),
+            ("fn_register_s", mean_of(rt_hists, "register_s")),
+            ("snapshot_restore_s", mean_of(plat_hists, "restore_s"))):
+        if value is not None:
+            measured[field] = value
+    if not measured:
+        print(f"[serve] no measurable costs this run; {path} not written")
+        return {}
+    doc = write_calibration(path, measured,
+                            meta={"source": "serve"})
+    print(f"[serve] wrote calibration {path}: {sorted(doc['measured'])}")
+    return doc
 
 
 if __name__ == "__main__":

@@ -1,0 +1,75 @@
+"""Measured-cost calibration: schema validation, round-trip, and
+SimParams override semantics."""
+import json
+import os
+
+import pytest
+
+from repro.core.calibrate import (CALIBRATABLE_FIELDS, SCHEMA,
+                                  apply_calibration, load_calibration,
+                                  write_calibration)
+from repro.core.sim import SimParams
+
+BUNDLED = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                       "data", "calibration_example.json")
+
+
+def test_round_trip(tmp_path):
+    path = str(tmp_path / "cal.json")
+    measured = {"hydra_runtime_cold_s": 0.033, "isolate_cold_s": 0.0007,
+                "isolate_warm_s": 2e-5, "snapshot_restore_s": 0.002,
+                "hydra_runtime_base": 52.7 * (1 << 20)}
+    doc = write_calibration(path, measured, meta={"host": "test"})
+    assert doc["schema"] == SCHEMA
+    loaded = load_calibration(path)
+    params = apply_calibration(SimParams(), loaded)
+    assert params.hydra_runtime_cold_s == 0.033
+    assert params.isolate_cold_s == 0.0007
+    assert params.snapshot_restore_s == 0.002
+    # int fields are rounded to whole bytes
+    assert params.hydra_runtime_base == int(round(52.7 * (1 << 20)))
+    # untouched fields keep the paper defaults
+    assert params.fn_register_s == SimParams().fn_register_s
+
+
+def test_apply_accepts_path_or_dict(tmp_path):
+    path = str(tmp_path / "cal.json")
+    write_calibration(path, {"vm_boot_s": 0.2})
+    assert apply_calibration(SimParams(), path).vm_boot_s == 0.2
+    assert apply_calibration(SimParams(),
+                             {"vm_boot_s": 0.3}).vm_boot_s == 0.3
+
+
+def test_unknown_field_is_a_schema_error(tmp_path):
+    with pytest.raises(ValueError, match="unknown field"):
+        write_calibration(str(tmp_path / "x.json"),
+                          {"machine_cap": 123})     # not calibratable
+    path = str(tmp_path / "y.json")
+    with open(path, "w") as f:
+        json.dump({"schema": SCHEMA,
+                   "measured": {"not_a_field": 1.0}}, f)
+    with pytest.raises(ValueError, match="unknown field"):
+        load_calibration(path)
+
+
+def test_bad_values_and_schema_rejected(tmp_path):
+    with pytest.raises(ValueError, match="non-negative"):
+        write_calibration(str(tmp_path / "x.json"),
+                          {"vm_boot_s": -1.0})
+    with pytest.raises(ValueError, match="non-negative"):
+        write_calibration(str(tmp_path / "x.json"),
+                          {"vm_boot_s": float("nan")})
+    with pytest.raises(ValueError, match="non-empty"):
+        write_calibration(str(tmp_path / "x.json"), {})
+    path = str(tmp_path / "wrong.json")
+    with open(path, "w") as f:
+        json.dump({"schema": "other/v9", "measured": {}}, f)
+    with pytest.raises(ValueError, match="hydra-calibration"):
+        load_calibration(path)
+
+
+def test_bundled_example_is_valid():
+    measured = load_calibration(BUNDLED)
+    assert set(measured) <= set(CALIBRATABLE_FIELDS)
+    params = apply_calibration(SimParams(), BUNDLED)
+    assert params.hydra_runtime_cold_s == measured["hydra_runtime_cold_s"]

@@ -163,6 +163,54 @@ def test_lm_snapshot_restore_serves_without_recompiling(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+def test_persist_executables_defaults_on_with_snapshot_dir(tmp_path):
+    """ROADMAP "snapshot warm-path": a snapshot-enabled platform persists
+    compiled executables by default; no snapshot_dir (or explicit False)
+    keeps the cache in-memory only."""
+    plat = HydraPlatform(pool_size=1, runtime_budget_bytes=64 * MB,
+                         snapshot_dir=str(tmp_path))
+    assert plat.exe_cache.persist_dir is not None
+    plat.shutdown()
+    plat = HydraPlatform(pool_size=1, runtime_budget_bytes=64 * MB)
+    assert plat.exe_cache.persist_dir is None
+    plat.shutdown()
+    plat = HydraPlatform(pool_size=1, runtime_budget_bytes=64 * MB,
+                         snapshot_dir=str(tmp_path),
+                         persist_executables=False)
+    assert plat.exe_cache.persist_dir is None
+    plat.shutdown()
+
+
+def test_snapshot_restore_zero_recompile_across_platform_boots(tmp_path):
+    """Regression for the cross-process warm path: a function exported
+    from one platform restores into a FRESHLY CONSTRUCTED platform (same
+    snapshot_dir) with zero new compilations — its executable
+    deserializes from the persisted cache instead of recompiling."""
+    plat = HydraPlatform(pool_size=1, runtime_budget_bytes=64 * MB,
+                         snapshot_dir=str(tmp_path))
+    try:
+        plat.register_function("t0/f", spec(), tenant="t0")
+        before = plat.invoke("t0/f", ARGS)
+        exported = plat.export_function("t0/f")
+    finally:
+        plat.shutdown()
+    assert plat.exe_cache.stats()["compiles"] == 1
+
+    fresh = HydraPlatform(pool_size=1, runtime_budget_bytes=64 * MB,
+                          snapshot_dir=str(tmp_path))
+    try:
+        fresh.import_function(exported)
+        fresh.restore("t0/f")
+        after = fresh.invoke("t0/f", ARGS)
+        assert float(after["y"][0]) == float(before["y"][0])
+        stats = fresh.exe_cache.stats()
+        assert stats["compiles"] == 0          # zero-recompile restore
+        assert stats["disk_hits"] >= 1         # served from persisted exe
+    finally:
+        fresh.shutdown()
+
+
+# ---------------------------------------------------------------------------
 def test_tracesim_pool_beats_hydra_on_default_trace():
     """Acceptance: the platform layer strictly reduces cold starts AND p99
     latency vs per-tenant hydra on the default Azure-calibrated trace."""

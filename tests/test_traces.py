@@ -1,0 +1,171 @@
+"""Trace layer: the Trace sequence interface, synthetic parity, and the
+Azure Functions 2019 loader (determinism, thinning, schema errors)."""
+import os
+
+import pytest
+
+from repro.core.traces import Invocation, Trace, gen_trace, load_azure_trace
+
+MB = 1 << 20
+DATA = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "data")
+SAMPLE = os.path.join(DATA, "azure_sample.csv")
+SAMPLE_DUR = os.path.join(DATA, "azure_sample_durations.csv")
+SAMPLE_MEM = os.path.join(DATA, "azure_sample_memory.csv")
+
+
+# ---------------------------------------------------------------------------
+def test_trace_is_a_sequence_over_invocations():
+    tr = Trace.synthetic(n_functions=10, n_tenants=2, duration_s=20.0,
+                         mean_rps=4.0, seed=3)
+    assert len(tr) > 0
+    assert isinstance(tr[0], Invocation)
+    assert isinstance(tr[:5], Trace) and len(tr[:5]) == 5
+    assert list(tr) == list(tr.invocations)
+    assert tr.duration_s == tr[-1].t
+    d = tr.describe()
+    assert d["source"] == "synthetic" and d["invocations"] == len(tr)
+
+
+def test_synthetic_trace_matches_gen_trace():
+    kw = dict(n_functions=10, n_tenants=2, duration_s=20.0, mean_rps=4.0,
+              seed=3)
+    assert list(Trace.synthetic(**kw)) == gen_trace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Azure loader on the bundled sample
+# ---------------------------------------------------------------------------
+def test_azure_sample_loads_with_tables():
+    tr = Trace.from_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                          memory_csv=SAMPLE_MEM)
+    assert tr.source == "azure"
+    assert len(tr) > 1000
+    ts = [i.t for i in tr]
+    assert ts == sorted(ts)
+    assert all(i.duration_s > 0 for i in tr)
+    assert all(i.mem_bytes >= 16 * MB for i in tr)
+    d = tr.describe()
+    assert d["functions"] == 36 and d["tenants"] == 18
+
+
+def test_azure_loader_is_deterministic():
+    a = Trace.from_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                         memory_csv=SAMPLE_MEM, seed=1)
+    b = Trace.from_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                         memory_csv=SAMPLE_MEM, seed=1)
+    assert list(a) == list(b)
+    c = Trace.from_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                         memory_csv=SAMPLE_MEM, seed=2)
+    assert list(a) != list(c)          # seed actually drives expansion
+
+
+def test_azure_thinning_hits_target_rps_deterministically():
+    full = Trace.from_azure(SAMPLE)
+    thin = Trace.from_azure(SAMPLE, target_rps=1.0, seed=5)
+    again = Trace.from_azure(SAMPLE, target_rps=1.0, seed=5)
+    assert list(thin) == list(again)
+    assert len(thin) < len(full)
+    # binomial thinning lands near the target (the sample runs ~3 rps)
+    assert thin.mean_rps == pytest.approx(1.0, rel=0.25)
+    assert thin.meta["thinning_keep"] < 1.0
+    # thinning preserves the invocation universe, not just a prefix
+    assert {i.fid for i in thin} <= {i.fid for i in full}
+
+
+def test_azure_loader_works_without_tables():
+    tr = Trace.from_azure(SAMPLE)      # falls back to seeded lognormals
+    assert len(tr) > 1000
+    assert all(0.1 <= i.duration_s <= 3.0 for i in tr)
+
+
+def test_azure_sparse_minute_columns_keep_real_timeline(tmp_path):
+    """A trimmed export whose zero-count minute columns were dropped must
+    keep its idle gaps: timestamps follow the numeric minute labels, not
+    the column positions."""
+    p = tmp_path / "gap.csv"
+    p.write_text("HashOwner,HashApp,HashFunction,Trigger,1,5,20\n"
+                 "o1,a1,f1,http,2,2,2\n")
+    tr = load_azure_trace(str(p))
+    ts = [i.t for i in tr]
+    assert len(ts) == 6
+    assert min(ts) < 60.0                 # minute '1' -> [0, 60)
+    assert max(ts) >= 19 * 60.0           # minute '20' -> [1140, 1200)
+    # the realized rate uses the real 20-minute horizon
+    assert tr.meta["raw_invocations"] == 6
+    # max_minutes truncates by minute label too, not column position
+    first2 = load_azure_trace(str(p), max_minutes=2)
+    assert len(first2) == 2 and max(i.t for i in first2) < 60.0
+
+
+def test_azure_max_minutes_truncates():
+    tr = Trace.from_azure(SAMPLE, max_minutes=5)
+    assert tr.duration_s <= 5 * 60.0
+    assert len(tr) > 0
+
+
+# ---------------------------------------------------------------------------
+# Schema errors
+# ---------------------------------------------------------------------------
+def test_azure_missing_required_columns(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("HashOwner,Trigger,1,2\no1,http,1,0\n")
+    with pytest.raises(ValueError, match="HashFunction"):
+        load_azure_trace(str(p))
+
+
+def test_azure_missing_minute_columns(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("HashOwner,HashApp,HashFunction,Trigger\no1,a1,f1,http\n")
+    with pytest.raises(ValueError, match="per-minute"):
+        load_azure_trace(str(p))
+
+
+def test_azure_empty_file(tmp_path):
+    p = tmp_path / "empty.csv"
+    p.write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        load_azure_trace(str(p))
+
+
+def test_azure_no_data_rows(tmp_path):
+    p = tmp_path / "hdr.csv"
+    p.write_text("HashOwner,HashApp,HashFunction,Trigger,1\n")
+    with pytest.raises(ValueError, match="no data rows"):
+        load_azure_trace(str(p))
+
+
+def test_azure_bad_durations_schema(tmp_path):
+    p = tmp_path / "ok.csv"
+    p.write_text("HashOwner,HashApp,HashFunction,Trigger,1\no1,a1,f1,http,2\n")
+    d = tmp_path / "dur.csv"
+    d.write_text("Function,Average\nf1,100\n")
+    with pytest.raises(ValueError, match="HashFunction"):
+        load_azure_trace(str(p), durations_csv=str(d))
+
+
+# ---------------------------------------------------------------------------
+# The loaded trace drives the simulator
+# ---------------------------------------------------------------------------
+def test_azure_trace_simulates():
+    from repro.core.sim import SimParams, simulate
+    tr = Trace.from_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                          memory_csv=SAMPLE_MEM, target_rps=0.5, seed=0)
+    r = simulate(tr, "hydra-pool", SimParams())
+    assert len(r.latencies) + r.dropped == len(tr)
+    assert r.ops_per_gb_s() > 0
+
+
+def test_azure_sample_density_ordering():
+    """Acceptance: on the bundled sample at fleet pressure (single-node
+    fixed pool sized for the fleet's peak warm capacity, cluster pools
+    EWMA-adaptive), density orders hydra-cluster >= hydra-pool >= hydra
+    — the ordering bench_trace's azure section reports."""
+    from repro.core.sim import SimParams, simulate
+    GB = 1 << 30
+    tr = Trace.from_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                          memory_csv=SAMPLE_MEM)
+    p = SimParams(runtime_cap=192 * MB, machine_cap=3 * GB, n_nodes=4,
+                  pool_size=8, pool_min=1, pool_max=2)
+    ops = {m: simulate(tr, m, p).ops_per_gb_s()
+           for m in ("hydra", "hydra-pool", "hydra-cluster")}
+    assert ops["hydra-cluster"] >= ops["hydra-pool"] >= ops["hydra"]
