@@ -18,6 +18,10 @@ Two workloads:
 ``--calibration cal.json`` overrides the paper's startup/memory
 constants with values measured on this host by
 ``bench_startup --emit-calibration`` (see ``repro.core.calibrate``).
+``--live`` additionally replays the (thinned) trace through the REAL
+gateway stack (``repro.gateway``) and reports live-vs-sim rows —
+``trace.live.gateway`` / ``trace.live.sim`` / ``trace.live.vs_sim``
+(see docs/benchmarks.md for the methodology).
 
   PYTHONPATH=src python benchmarks/bench_trace.py \\
       --trace-file benchmarks/data/azure_sample.csv \\
@@ -201,6 +205,46 @@ def synthetic_rows() -> list:
     return rows
 
 
+def live_rows(trace_file: str = AZURE_SAMPLE, compress: float = 120.0,
+              target_rps: float = 2.0, max_minutes: int = 10,
+              pool_size: int = 4, seed: int = 0) -> list:
+    """Live-vs-sim section: replay one thinned trace through the REAL
+    gateway stack (``repro.gateway``) and the simulator, and report both
+    plus their deltas — the wall-clock counterpart of every simulated
+    row above. The cold-start delta is the metric ``gateway/validate.py``
+    enforces in CI; here it is reported alongside the latency deltas
+    (live trace-time percentiles carry a compress-amplified startup
+    term, so they are context, not a gate)."""
+    from repro.gateway import load_trace, run_validation
+
+    trace = load_trace(trace_file, target_rps=target_rps,
+                       max_minutes=max_minutes, seed=seed)
+    report = run_validation(trace, compress=compress, pool_size=pool_size)
+    live, sim = report["live"], report["sim"]
+    tol = report["tolerance"]
+    rows = []
+    for name, s in (("trace.live.gateway", live), ("trace.live.sim", sim)):
+        rows.append({
+            "name": name,
+            "us_per_call": s["p99_s"] * 1e6,
+            "derived": (f"requests={s['requests']};"
+                        f"cold_rt={s['cold_runtime']};"
+                        f"pool_claims={s['pool_claims']};"
+                        f"mean_mem_mb={s['mean_mem_mb']:.0f};"
+                        f"dropped={s['dropped']}"),
+        })
+    rows.append({
+        "name": "trace.live.vs_sim",
+        "us_per_call": 0.0,
+        "derived": (f"cold_rt={tol['cold_live']}_vs_{tol['cold_sim']};"
+                    f"cold_tolerance={tol['limit']:.1f};"
+                    f"cold_within_tolerance={tol['passed']};"
+                    f"p99_delta_s={live['p99_s'] - sim['p99_s']:.3f};"
+                    f"compress={compress:g}"),
+    })
+    return rows
+
+
 def azure_section(trace_file: str, calibration: str = None,
                   durations: str = None, memory: str = None,
                   target_rps: float = None, max_minutes: int = None,
@@ -270,7 +314,22 @@ def main(argv=None) -> int:
                     help=f"comma-separated subset of {list(MODELS)}")
     ap.add_argument("--synthetic", action="store_true",
                     help="also run the synthetic-trace sections")
+    ap.add_argument("--live", action="store_true",
+                    help="also replay the (thinned) trace through the "
+                         "REAL gateway stack and report live-vs-sim "
+                         "deltas (see repro.gateway)")
+    ap.add_argument("--live-compress", type=float, default=120.0,
+                    help="wall-clock compression for the --live replay")
     args = ap.parse_args(argv)
+
+    if not os.path.isfile(args.trace_file):
+        print(f"bench_trace: trace file not found: {args.trace_file}",
+              file=sys.stderr)
+        return 2
+    if not os.access(args.trace_file, os.R_OK):
+        print(f"bench_trace: trace file not readable: {args.trace_file}",
+              file=sys.stderr)
+        return 2
 
     rows = azure_section(
         args.trace_file, calibration=args.calibration,
@@ -280,6 +339,11 @@ def main(argv=None) -> int:
         models=args.models.split(",") if args.models else None)
     if args.synthetic:
         rows += synthetic_rows()
+    if args.live:
+        rows += live_rows(args.trace_file, compress=args.live_compress,
+                          target_rps=args.target_rps or 2.0,
+                          max_minutes=args.max_minutes or 10,
+                          seed=args.seed)
 
     print("name,us_per_call,derived")
     for row in rows:

@@ -1,4 +1,16 @@
-"""Lightweight counters/histograms for runtime accounting."""
+"""Lightweight counters/histograms for runtime accounting.
+
+Thread-safety contract: every public operation — ``inc``, ``observe``,
+``timeit``, ``snapshot``, and the ``Histogram`` accessors — may be called
+from any number of threads concurrently (gateway workers, platform refill
+threads, runtime workers, the janitor). Counters live behind the
+``Metrics`` lock; each ``Histogram`` has its own lock; histogram
+*creation* is serialized under the ``Metrics`` lock so two racing
+``observe`` calls on a brand-new name can never each create a histogram
+and drop one of the observations (the old ``defaultdict`` pattern did
+exactly that). ``snapshot`` copies the maps under the lock before
+rendering, so it never iterates a dict another thread is growing.
+"""
 from __future__ import annotations
 
 import threading
@@ -17,38 +29,62 @@ class Histogram:
         with self._lock:
             self._vals.append(float(v))
 
-    def percentile(self, q) -> float:
+    def _copy(self) -> list:
         with self._lock:
-            if not self._vals:
-                return float("nan")
-            return float(np.percentile(self._vals, q))
+            return list(self._vals)
+
+    def percentile(self, q) -> float:
+        vals = self._copy()
+        if not vals:
+            return float("nan")
+        return float(np.percentile(vals, q))
 
     @property
     def count(self) -> int:
-        return len(self._vals)
+        with self._lock:
+            return len(self._vals)
 
     @property
     def mean(self) -> float:
-        with self._lock:
-            return float(np.mean(self._vals)) if self._vals else float("nan")
+        vals = self._copy()
+        return float(np.mean(vals)) if vals else float("nan")
 
     def snapshot(self) -> dict:
-        return {"count": self.count, "mean": self.mean,
-                "p50": self.percentile(50), "p99": self.percentile(99)}
+        # one consistent copy: count/mean/percentiles all describe the
+        # same set of observations even while writers keep appending
+        vals = self._copy()
+        if not vals:
+            return {"count": 0, "mean": float("nan"),
+                    "p50": float("nan"), "p99": float("nan")}
+        arr = np.asarray(vals)
+        return {"count": len(vals), "mean": float(arr.mean()),
+                "p50": float(np.percentile(arr, 50)),
+                "p99": float(np.percentile(arr, 99))}
 
 
 class Metrics:
     def __init__(self):
+        # counters stays a defaultdict so read-side code can probe
+        # metrics.counters["name"] without guards; all WRITES go through
+        # inc() under the lock
         self.counters = defaultdict(int)
-        self.hists: dict[str, Histogram] = defaultdict(Histogram)
+        self.hists: dict[str, Histogram] = {}
         self._lock = threading.Lock()
 
     def inc(self, name: str, n: int = 1):
         with self._lock:
             self.counters[name] += n
 
+    def hist(self, name: str) -> Histogram:
+        """The named histogram, created atomically on first use."""
+        with self._lock:
+            h = self.hists.get(name)
+            if h is None:
+                h = self.hists[name] = Histogram()
+            return h
+
     def observe(self, name: str, v: float):
-        self.hists[name].observe(v)
+        self.hist(name).observe(v)
 
     def timeit(self, name: str):
         metrics = self
@@ -64,5 +100,8 @@ class Metrics:
         return _Timer()
 
     def snapshot(self) -> dict:
-        return {"counters": dict(self.counters),
-                "hists": {k: h.snapshot() for k, h in self.hists.items()}}
+        with self._lock:
+            counters = dict(self.counters)
+            hists = dict(self.hists)
+        return {"counters": counters,
+                "hists": {k: h.snapshot() for k, h in hists.items()}}

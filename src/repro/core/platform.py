@@ -307,6 +307,39 @@ class HydraPlatform:
             self._ensure_placed(rec)
         return True
 
+    def _admitted_map(self) -> dict:
+        """id(runtime) -> sum of placement estimates admitted onto it.
+        Placement must check estimates against the runtime budget, not
+        ``budget.free``: an estimate covers one live arena beyond the
+        registration reservation, and that headroom is not reserved
+        until the arena pool allocates it — packing by ``free`` would
+        let later registrations eat earlier functions' arena headroom
+        and OOM their first invocation. Caller holds ``self._lock``."""
+        admitted: dict = {}
+        for r in self._records.values():
+            if r.runtime is not None:
+                key = id(r.runtime)
+                admitted[key] = admitted.get(key, 0) + r.need_bytes
+        return admitted
+
+    def _try_admit(self, rec: _FunctionRecord, rt: HydraRuntime) -> bool:
+        """Atomically re-check budget/estimate headroom for ``rt`` and
+        optimistically assign ``rec.runtime`` so RACING placements of
+        other fids (serialized only by their own place_lock) see this
+        admission in the estimate sum and cannot co-admit past the
+        runtime budget. Caller must clear ``rec.runtime`` on failure."""
+        with self._lock:
+            if rt not in self._active:
+                return False
+            admitted = sum(r.need_bytes for r in self._records.values()
+                           if r.runtime is rt)
+            if (rt.budget.free < rec.need_bytes
+                    or admitted + rec.need_bytes
+                    > self.params.runtime_budget_bytes):
+                return False
+            rec.runtime = rt
+            return True
+
     def _ensure_placed(self, rec: _FunctionRecord) -> HydraRuntime:
         # per-record lock: racing first invocations of one fid must not
         # both run placement (the loser would register a zombie copy into
@@ -324,39 +357,59 @@ class HydraPlatform:
                 candidates = sorted(self._active,
                                     key=lambda r: r.budget.used,
                                     reverse=True)
+                admitted = self._admitted_map()
             for rt in candidates:
-                if rt.budget.free < rec.need_bytes:
+                # lock-free pre-filter on the snapshot; _try_admit
+                # re-checks the chosen runtime atomically
+                if (rt.budget.free < rec.need_bytes
+                        or (admitted.get(id(rt), 0) + rec.need_bytes
+                            > self.params.runtime_budget_bytes)):
+                    continue
+                if not self._try_admit(rec, rt):
                     continue
                 try:
-                    if rt.register_function(rec.fid, rec.spec,
-                                            tenant=rec.tenant,
-                                            mem_budget=rec.mem_budget):
-                        with self._lock:
-                            still_active = rt in self._active
-                        if not still_active:
-                            # raced an eviction that returned/shut down
-                            # this runtime after we snapshotted candidates
-                            rt.deregister_function(rec.fid)
-                            continue
-                        self.metrics.inc("place.colocated")
-                        rec.runtime = rt
-                        return rt
+                    ok = rt.register_function(rec.fid, rec.spec,
+                                              tenant=rec.tenant,
+                                              mem_budget=rec.mem_budget)
                 except HydraOOMError:
+                    rec.runtime = None
                     continue        # raced/underestimated: try the next
+                except BaseException:
+                    # the optimistic admission must NEVER outlive a
+                    # failed registration — a dangling rec.runtime would
+                    # brick every future invocation of this fid
+                    rec.runtime = None
+                    raise
+                if not ok:
+                    rec.runtime = None
+                    continue
+                with self._lock:
+                    still_active = rt in self._active
+                if not still_active:
+                    # raced an eviction that returned/shut down this
+                    # runtime during registration
+                    rt.deregister_function(rec.fid)
+                    rec.runtime = None
+                    continue
+                self.metrics.inc("place.colocated")
+                return rt
             # saturated everywhere: spill to a pool instance
             rt = self._claim_runtime()
+            with self._lock:
+                rec.runtime = rt     # visible to racing admission checks
             try:
                 ok = rt.register_function(rec.fid, rec.spec,
                                           tenant=rec.tenant,
                                           mem_budget=rec.mem_budget)
-            except HydraError:
+            except BaseException:
+                rec.runtime = None
                 self._return_runtime(rt)
                 raise
             if not ok:
+                rec.runtime = None
                 self._return_runtime(rt)
                 raise HydraError(f"placement of {rec.fid} rejected")
             self.metrics.inc("place.spill")
-            rec.runtime = rt
             return rt
 
     def _record(self, fid: str) -> _FunctionRecord:
@@ -369,6 +422,13 @@ class HydraPlatform:
     def runtime_for(self, fid: str) -> HydraRuntime:
         """The runtime hosting ``fid`` (placing it first if needed)."""
         return self._ensure_placed(self._record(fid))
+
+    def runtimes(self) -> list:
+        """Point-in-time snapshot of every live runtime (pooled + active),
+        safe to iterate while placement proceeds; the gateway recorder
+        aggregates per-runtime arena/invocation counters through this."""
+        with self._lock:
+            return list(self._pool) + list(self._active)
 
     def function_records(self) -> list:
         """Point-in-time snapshot of this node's function records, safe

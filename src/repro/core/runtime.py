@@ -18,6 +18,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.arena import ArenaPool, tree_bytes
 from repro.core.budget import MemoryBudget
@@ -112,7 +113,12 @@ class HydraRuntime:
             key, lambda: jax.jit(fresh).lower(params_spec, args_spec),
             fid=fid)
         nb = max(spec.arena_bytes, 8)
-        factory = lambda: {"scratch": jnp.zeros((nb // 4,), jnp.float32)}
+        # plain host-zeros + device_put: a jnp.zeros here would XLA-compile
+        # one fill kernel PER DISTINCT arena size, turning the first
+        # allocation of every size into a compile stall on the request
+        # path — the opposite of the paper's <500us isolate start
+        factory = lambda: {"scratch": jax.device_put(
+            np.zeros((nb // 4,), np.float32))}
         return Function(fid=fid, tenant=tenant, spec=spec, mem_budget=budget,
                         entry={"invoke": entry.compiled},
                         arena_sig=("scratch", nb), arena_factory=factory)

@@ -1,0 +1,49 @@
+"""Live serving gateway: wall-clock trace replay against the real Hydra
+stack.
+
+Everything before this package measured the live stack with closed-loop
+synthetic drivers and projected trace behaviour through the
+discrete-event simulator (``repro.core.sim``). The gateway closes the
+gap: it replays a ``Trace`` (synthetic or Azure Functions 2019 CSV)
+**open-loop in wall-clock time** — with a compression knob so a trace
+minute replays in a second — against a real ``HydraRuntime``,
+``HydraPlatform``, or ``HydraCluster``, and reports results in the
+simulator's own ``SimResult`` schema so live and simulated replays diff
+metric-by-metric (``repro.gateway.validate``).
+
+Pieces (one module each):
+
+  * ``targets``  — adapters normalizing the three live stacks;
+  * ``workload`` — trace fids materialized as real registered functions;
+  * ``gateway``  — the front door: per-function routing, bounded
+    per-tenant queues, token-bucket admission, SLO timeouts, worker
+    threads; plus the platform ``Autoscaler``
+    (``ArrivalRateEstimator`` -> ``AdaptivePoolPolicy`` ->
+    ``resize_pool``);
+  * ``loadgen``  — open-loop arrival scheduling on the wall clock;
+  * ``recorder`` — live metrics -> ``SimResult``;
+  * ``replay``   — ``replay_trace(trace, target, cfg)`` orchestration;
+  * ``validate`` — sim-vs-real delta report + the enforced cold-start
+    tolerance gate (CI ``gateway-smoke``).
+
+Entry points: ``python -m repro.launch.serve --gateway --trace-file ...
+--compress 60`` for a live replay, ``python -m repro.gateway.validate``
+for the sim-vs-real diff.
+"""
+from repro.gateway.gateway import Autoscaler, Gateway, GatewayParams
+from repro.gateway.loadgen import LoadGenerator, LoadResult
+from repro.gateway.recorder import Recorder
+from repro.gateway.replay import ReplayConfig, replay_trace
+from repro.gateway.targets import (ClusterTarget, PlatformTarget,
+                                   RuntimeTarget, TargetAdapter, wrap_target)
+from repro.gateway.validate import (format_report, load_trace,
+                                    run_validation, sim_params_for_live)
+from repro.gateway.workload import TraceWorkload, scaled_runtime_budget
+
+__all__ = [
+    "Gateway", "GatewayParams", "Autoscaler", "LoadGenerator", "LoadResult",
+    "Recorder", "ReplayConfig", "replay_trace", "TargetAdapter",
+    "RuntimeTarget", "PlatformTarget", "ClusterTarget", "wrap_target",
+    "TraceWorkload", "scaled_runtime_budget", "run_validation",
+    "format_report", "sim_params_for_live", "load_trace",
+]

@@ -1,0 +1,283 @@
+"""The serving front door: routing, bounded per-tenant queues, admission
+control, SLO timeouts, and worker threads that drive the real stack.
+
+Request path (the live analog of the sim engine's arrival handling)::
+
+    LoadGenerator (open loop, wall clock)
+        └─> Gateway.submit(inv)
+              ├─ routing: trace fid -> registered function name
+              ├─ admission: per-tenant TokenBucket (cgroup CPU-share
+              │  analog, reused from core/scheduler.py) — over-rate
+              │  tenants are throttled, not queued
+              ├─ bounded per-tenant queue (depth = queue_depth;
+              │  overflow is rejected, protecting every other tenant)
+              └─ notify workers
+    worker threads (n_workers)
+        ├─ round-robin across tenants (no tenant starves another)
+        ├─ SLO gate: a request that waited past slo_timeout_s (in
+        │  trace seconds) is dropped, not served late
+        ├─ adapter.invoke(...)  — the REAL path: registry lookup,
+        │  placement/pool claim, arena acquire, compiled executable
+        └─ sleep(duration / compress) — the emulated function body
+
+All times cross between two clocks: *wall* seconds (what
+``time.monotonic`` measures while the replay runs) and *trace* seconds
+(the timeline the trace was recorded on). ``compress`` trace seconds
+pass per wall second, so a trace minute replays in one second at
+``compress=60``. Latencies are recorded in trace seconds
+(``wall * compress``) so live results are directly comparable with
+``core/sim`` output — with the caveat (see docs/benchmarks.md) that
+real startup costs do not compress, so they appear amplified by
+``compress`` in trace-time units.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.cluster import AdaptivePoolPolicy, ArrivalRateEstimator
+from repro.core.errors import HydraOOMError
+from repro.core.scheduler import TokenBucket
+
+
+@dataclass
+class GatewayParams:
+    n_workers: int = 16
+    queue_depth: int = 256             # per-tenant bound
+    slo_timeout_s: Optional[float] = None   # trace seconds; None disables
+    max_wait_s: float = 30.0           # trace seconds before an OOM-retried
+                                       # request gives up (sim: max_wait_s)
+    retry_backoff_s: float = 0.02      # wall seconds between OOM retries
+    tenant_rate: Optional[float] = None     # trace req/s; None disables
+    tenant_burst: float = 16.0         # token bucket burst (requests)
+    compress: float = 60.0             # trace seconds per wall second
+
+
+@dataclass
+class _Request:
+    inv: object                        # the trace Invocation
+    name: str                          # registered function name
+    sched_wall: float                  # intended (open-loop) arrival
+    retries: int = 0
+
+
+class Gateway:
+    """Multi-threaded front door over an adapted serving stack."""
+
+    def __init__(self, adapter, workload, params: GatewayParams,
+                 recorder, autoscaler: Optional["Autoscaler"] = None):
+        self.adapter = adapter
+        self.workload = workload
+        self.params = params
+        self.recorder = recorder
+        self.autoscaler = autoscaler
+        self._queues: dict[str, deque] = {}
+        self._rr: list[str] = []       # tenant round-robin order
+        self._rr_next = 0
+        self._cv = threading.Condition()
+        self._buckets: dict[str, TokenBucket] = {}
+        self._in_flight = 0
+        self._stop = False
+        self._workers: list[threading.Thread] = []
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        for i in range(self.params.n_workers):
+            t = threading.Thread(target=self._worker_loop, daemon=True,
+                                 name=f"gateway-w{i}")
+            t.start()
+            self._workers.append(t)
+
+    def submit(self, inv, sched_wall: Optional[float] = None) -> bool:
+        """Admit one trace invocation. Returns False when the request is
+        dropped at the door (unknown function, throttled tenant, or a
+        full queue) — every False is recorded with its reason."""
+        now = time.monotonic()
+        sched_wall = now if sched_wall is None else sched_wall
+        name = self.workload.name_for(inv)
+        if name is None:
+            self.recorder.drop("unknown")
+            return False
+        tenant = self.workload.tenant_name(inv.tenant)
+        # platform adaptive pool sizing sees every arrival, accepted or
+        # not: load shed at the door is still load the pool should
+        # absorb (cluster targets feed their own per-node estimators
+        # inside HydraCluster.invoke instead)
+        if self.autoscaler is not None:
+            self.autoscaler.observe(now)
+        p = self.params
+        if p.tenant_rate is not None:
+            bucket = self._buckets.get(tenant)
+            if bucket is None:
+                # trace req/s -> wall req/s at the compression factor
+                bucket = self._buckets.setdefault(
+                    tenant, TokenBucket(rate=p.tenant_rate * p.compress,
+                                        burst=p.tenant_burst))
+            if not bucket.try_take():
+                self.recorder.drop("throttled")
+                return False
+        with self._cv:
+            q = self._queues.get(tenant)
+            if q is None:
+                q = self._queues[tenant] = deque()
+                self._rr.append(tenant)
+            if len(q) >= p.queue_depth:
+                self.recorder.drop("rejected")
+                return False
+            q.append(_Request(inv=inv, name=name, sched_wall=sched_wall))
+            self._cv.notify()
+        return True
+
+    # ------------------------------------------------------------------
+    def _next_request(self) -> Optional[_Request]:
+        """Round-robin pop across tenants; caller holds the lock."""
+        n = len(self._rr)
+        for off in range(n):
+            tenant = self._rr[(self._rr_next + off) % n]
+            q = self._queues[tenant]
+            if q:
+                self._rr_next = (self._rr_next + off + 1) % n
+                return q.popleft()
+        return None
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                req = self._next_request()
+                while req is None and not self._stop:
+                    self._cv.wait(timeout=0.1)
+                    req = self._next_request()
+                if req is None:        # stopping and drained
+                    return
+                self._in_flight += 1
+            try:
+                self._serve(req)
+            finally:
+                with self._cv:
+                    self._in_flight -= 1
+                    self._cv.notify_all()
+
+    def _serve(self, req: _Request) -> None:
+        p = self.params
+        now = time.monotonic()
+        waited_trace = (now - req.sched_wall) * p.compress
+        if p.slo_timeout_s is not None and waited_trace > p.slo_timeout_s:
+            self.recorder.drop("slo_timeout")
+            return
+        inv = req.inv
+        try:
+            self.adapter.invoke(req.name, self.workload.args_for(inv))
+        except HydraOOMError as e:
+            # the fleet is momentarily full (arena budgets saturated by
+            # the burst): back off and requeue, like the sim engine's
+            # retry path, until max_wait/SLO expires
+            if waited_trace > p.max_wait_s:
+                self.recorder.drop("gave_up")
+                return
+            req.retries += 1
+            self.recorder.retried()
+            time.sleep(p.retry_backoff_s)
+            tenant = self.workload.tenant_name(inv.tenant)
+            with self._cv:
+                if not self._stop:
+                    self._queues[tenant].appendleft(req)
+                    self._cv.notify()
+                else:
+                    self.recorder.error(e)
+            return
+        except Exception as e:
+            self.recorder.error(e)
+            return
+        # emulated function body: the trace's duration at compressed
+        # wall time (the invoke above covered only the platform path)
+        if inv.duration_s > 0:
+            time.sleep(inv.duration_s / p.compress)
+        latency_trace = (time.monotonic() - req.sched_wall) * p.compress
+        self.recorder.record(latency_trace, inv.duration_s)
+
+    # ------------------------------------------------------------------
+    def drain(self, timeout_s: float = 60.0) -> bool:
+        """Block until every queued + in-flight request is finished (or
+        the timeout passes). Returns True when fully drained."""
+        deadline = time.monotonic() + timeout_s
+        with self._cv:
+            while (any(self._queues.values()) or self._in_flight > 0):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(timeout=min(remaining, 0.25))
+        return True
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._workers:
+            t.join(timeout=5.0)
+
+    def depth(self) -> int:
+        with self._cv:
+            return sum(len(q) for q in self._queues.values()) \
+                + self._in_flight
+
+
+# ---------------------------------------------------------------------------
+class Autoscaler:
+    """Background pool sizing for a single-node ``HydraPlatform``.
+
+    The cluster stack has adaptive pools built in (per-node EWMA
+    estimators fed by ``observe_arrival``); a bare platform does not —
+    this thread closes that gap with the SAME policy objects
+    (``ArrivalRateEstimator`` + ``AdaptivePoolPolicy``): the gateway
+    feeds arrivals in wall time, and every ``interval_s`` the estimated
+    rate maps to a pool target which drives ``resize_pool``. ``cover_s``
+    is in *wall* seconds — runtime boots do not compress, so the pool
+    must absorb the arrivals of one real boot window, however fast the
+    trace is being replayed.
+    """
+
+    def __init__(self, platform, *, pool_min: int = 1, pool_max: int = 8,
+                 cover_s: float = 1.0, interval_s: float = 0.25,
+                 alpha: float = 0.5):
+        self.platform = platform
+        self.estimator = ArrivalRateEstimator(alpha=alpha)
+        self.policy = AdaptivePoolPolicy(
+            pool_min=pool_min, pool_max=pool_max, cover_s=cover_s,
+            runtime_bytes=platform.params.runtime_budget_bytes)
+        self.interval_s = interval_s
+        self.resizes = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def observe(self, now: Optional[float] = None) -> None:
+        with self._lock:
+            self.estimator.observe(time.monotonic() if now is None else now)
+
+    def tick(self, now: Optional[float] = None) -> int:
+        """One sizing decision; returns the chosen pool target."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            rate = self.estimator.rate(now)
+        target = self.policy.target(rate)
+        if target != self.platform.params.pool_size:
+            self.platform.resize_pool(target)
+            self.resizes += 1
+        return target
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="gateway-autoscaler")
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self.tick()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)

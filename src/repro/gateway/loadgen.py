@@ -1,0 +1,62 @@
+"""Open-loop load generation: the trace's arrival process on the wall
+clock.
+
+Closed-loop drivers (like the synthetic loop in ``launch/serve.py``)
+submit the next request when the previous one finishes, so a slow
+platform quietly sees *less* load — exactly the feedback that hides
+cold-start pain. The ``LoadGenerator`` is open loop: every invocation
+is submitted at its trace timestamp (divided by ``compress``) whether
+or not earlier requests completed; queueing, throttling, and SLO
+misses then land in the gateway where they belong.
+
+If the generator itself falls behind (the submit path stalled longer
+than the gap to the next arrival), the invocation is submitted
+immediately but keeps its *intended* schedule time, so the lag is
+charged to measured latency rather than silently re-timing the trace;
+``LoadResult.late``/``max_lag_s`` report how often that happened.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+# a submit later than this (wall seconds) counts as "late" — small
+# scheduler jitter below it is noise, not lag
+LATE_SLACK_S = 0.010
+
+
+@dataclass
+class LoadResult:
+    submitted: int = 0
+    accepted: int = 0
+    late: int = 0
+    max_lag_s: float = 0.0        # worst wall-clock lag behind schedule
+    wall_s: float = 0.0           # generator wall-clock run time
+
+
+class LoadGenerator:
+    def __init__(self, trace, gateway, compress: float = 60.0):
+        self.trace = trace
+        self.gateway = gateway
+        self.compress = compress
+
+    def run(self, t0_wall: Optional[float] = None) -> LoadResult:
+        """Replay the whole trace; blocks until the last submit."""
+        t0 = time.monotonic() if t0_wall is None else t0_wall
+        res = LoadResult()
+        for inv in self.trace:
+            target = t0 + inv.t / self.compress
+            now = time.monotonic()
+            if target > now:
+                time.sleep(target - now)
+            else:
+                lag = now - target
+                if lag > LATE_SLACK_S:
+                    res.late += 1
+                    res.max_lag_s = max(res.max_lag_s, lag)
+            res.submitted += 1
+            if self.gateway.submit(inv, sched_wall=target):
+                res.accepted += 1
+        res.wall_s = time.monotonic() - t0
+        return res

@@ -1,0 +1,150 @@
+"""Live-replay recording in the simulator's result schema.
+
+The whole point of the gateway is a closed loop with ``core/sim``: a
+live replay must come back in the exact shape a simulated replay does,
+so the two are diffable metric-by-metric (``gateway/validate.py``).
+``Recorder.finish`` therefore returns a real
+:class:`repro.core.sim.engine.SimResult` — not a look-alike — with:
+
+  * ``latencies``/``overheads`` recorded per served request in *trace*
+    seconds (wall seconds x the compression factor);
+  * ``mem_samples``/``pool_mem_samples``/``runtime_count_samples``
+    gathered by a background sampler thread on a fixed wall-clock grid
+    (timestamps converted to trace time), using the adapters' budget +
+    per-runtime-base accounting;
+  * cold/warm/pool/evicted counters read from the live platform metrics
+    through the adapter at finish time.
+
+Everything the sim has no vocabulary for — drop reasons, invoke
+errors, wall-clock duration — is returned separately by ``extras()``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+from repro.core.sim.engine import SimResult
+
+
+class Recorder:
+    def __init__(self, adapter, *, compress: float,
+                 sample_dt_s: float = 0.25):
+        self.adapter = adapter
+        self.compress = compress
+        self.sample_dt_s = sample_dt_s
+        self._lock = threading.Lock()
+        self._latencies: list = []
+        self._overheads: list = []
+        self._drops: dict[str, int] = {}
+        self._retries = 0
+        self._sample_failures = 0
+        self._errors: list = []
+        self._mem: list = []
+        self._pool: list = []
+        self._counts: list = []
+        self._peak_pool = 0
+        # isolate counters can shrink when a drained runtime shuts down
+        # (its Metrics object goes with it); keep the max observed
+        self._iso_peak = (0, 0)
+        self._t0: Optional[float] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- request accounting -------------------------------------------------
+    def record(self, latency_trace_s: float, duration_s: float) -> None:
+        with self._lock:
+            self._latencies.append(latency_trace_s)
+            self._overheads.append(latency_trace_s - duration_s)
+
+    def drop(self, reason: str) -> None:
+        with self._lock:
+            self._drops[reason] = self._drops.get(reason, 0) + 1
+
+    def retried(self) -> None:
+        with self._lock:
+            self._retries += 1
+
+    def error(self, exc: Exception) -> None:
+        with self._lock:
+            if len(self._errors) < 32:       # keep a bounded sample
+                self._errors.append(f"{type(exc).__name__}: {exc}")
+            self._drops["error"] = self._drops.get("error", 0) + 1
+
+    # -- fleet sampling -----------------------------------------------------
+    def start(self, t0_wall: float) -> None:
+        self._t0 = t0_wall
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="gateway-recorder")
+        self._thread.start()
+
+    def _sample_once(self) -> None:
+        s = self.adapter.sample()
+        t_trace = (time.monotonic() - self._t0) * self.compress
+        iso = self.adapter._isolate_counts()
+        with self._lock:
+            self._mem.append((t_trace, s["mem_bytes"]))
+            self._pool.append((t_trace, s["pool_bytes"]))
+            self._counts.append((t_trace, s["runtimes"]))
+            self._peak_pool = max(self._peak_pool, s["pool_bytes"])
+            self._iso_peak = (max(self._iso_peak[0], iso[0]),
+                              max(self._iso_peak[1], iso[1]))
+
+    def _loop(self) -> None:
+        failures = 0
+        while not self._stop.wait(self.sample_dt_s):
+            try:
+                self._sample_once()
+                failures = 0
+            except Exception:
+                # a transient race (e.g. an autoscaler resize shutting a
+                # runtime down mid-sample) must not kill sampling for the
+                # rest of the replay — and is NOT a request-level drop;
+                # only persistent failure stops the thread
+                with self._lock:
+                    self._sample_failures += 1
+                failures += 1
+                if failures >= 5:
+                    return
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        try:
+            self._sample_once()               # closing sample
+        except Exception:
+            pass
+
+    # -- result -------------------------------------------------------------
+    def finish(self, n_nodes: int = 1) -> SimResult:
+        c = self.adapter.counters()
+        iso_cold = max(self._iso_peak[0], c["cold_isolate"])
+        iso_warm = max(self._iso_peak[1], c["warm_isolate"])
+        with self._lock:
+            res = SimResult(
+                model=f"live-{self.adapter.kind}",
+                latencies=list(self._latencies),
+                overheads=list(self._overheads),
+                mem_samples=list(self._mem),
+                pool_mem_samples=list(self._pool),
+                runtime_count_samples=list(self._counts),
+                cold_runtime_starts=c["cold_runtime"],
+                cold_isolate_starts=iso_cold,
+                warm_isolate_starts=iso_warm,
+                evicted_runtimes=c["evicted_runtimes"],
+                dropped=sum(self._drops.values()),
+                pool_claims=c["pool_claims"],
+                transfers=c["transfers"],
+                peak_pool_mem=self._peak_pool,
+                n_nodes=n_nodes,
+            )
+        return res
+
+    def extras(self) -> dict:
+        with self._lock:
+            return {"drops": dict(self._drops),
+                    "retries": self._retries,
+                    "sample_failures": self._sample_failures,
+                    "errors": list(self._errors)}

@@ -1,0 +1,122 @@
+"""One-call orchestration: trace + live stack -> SimResult.
+
+``replay_trace`` wires the pieces — target adapter, trace workload,
+recorder (sampler thread), gateway workers, optional platform
+autoscaler, open-loop load generator — runs the replay, drains, and
+returns ``(SimResult, extras)``.
+
+The caller owns the target's lifecycle: build the
+runtime/platform/cluster, replay, then ``target.shutdown()``. That
+keeps replays composable (e.g. two traces back-to-back against one
+warm platform to measure the warm-path delta).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.gateway.gateway import Autoscaler, Gateway, GatewayParams
+from repro.gateway.loadgen import LoadGenerator
+from repro.gateway.recorder import Recorder
+from repro.gateway.targets import DEFAULT_RUNTIME_BASE, wrap_target
+from repro.gateway.workload import TraceWorkload
+
+
+@dataclass
+class ReplayConfig:
+    compress: float = 60.0             # trace seconds per wall second
+    mem_scale: float = 1.0 / 64        # trace bytes -> live arena bytes
+    n_workers: int = 16
+    queue_depth: int = 256
+    slo_timeout_s: Optional[float] = None   # trace seconds; None disables
+    tenant_rate: Optional[float] = None     # trace req/s; None disables
+    tenant_burst: float = 16.0
+    sample_dt_s: float = 0.25          # wall seconds between fleet samples
+    autoscale: bool = True             # platform targets only
+    pool_min: int = 1
+    pool_max: int = 8
+    cover_s: float = 1.0               # wall seconds one warm pool absorbs
+    runtime_base_bytes: int = DEFAULT_RUNTIME_BASE
+    drain_timeout_s: float = 120.0     # wall seconds
+
+
+def _budget_of(adapter) -> Optional[int]:
+    """The per-runtime byte budget of the adapted stack, used to cap the
+    emulated workload's arenas so registration always admits."""
+    t = adapter.target
+    if adapter.kind == "platform":
+        return t.params.runtime_budget_bytes
+    if adapter.kind == "cluster":
+        return t.params.platform.runtime_budget_bytes
+    if adapter.kind == "runtime":
+        return t.budget.capacity
+    return None
+
+
+def build_workload(adapter, cfg: ReplayConfig) -> TraceWorkload:
+    wl = TraceWorkload(mem_scale=cfg.mem_scale)
+    budget = _budget_of(adapter)
+    if budget is not None:
+        # a function's placement estimate is ~2 arenas + O(1 KB); keep
+        # even the biggest trace function admissible on one runtime
+        cap = max(64 * 1024, (budget - 8 * 1024) // 2)
+        wl.max_arena_bytes = cap
+        wl.min_arena_bytes = min(wl.min_arena_bytes, cap)
+    return wl
+
+
+def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
+    """Replay ``trace`` open-loop against ``target`` (a ``HydraRuntime``,
+    ``HydraPlatform``, or ``HydraCluster``). Returns ``(SimResult,
+    extras)`` — the result in the simulator's schema, plus live-only
+    detail (drop reasons, invoke errors, load-generator lag, wall
+    time)."""
+    cfg = cfg or ReplayConfig()
+    adapter = wrap_target(target, cfg.runtime_base_bytes)
+    workload = build_workload(adapter, cfg)
+    n_registered = workload.register_all(trace, adapter)
+
+    recorder = Recorder(adapter, compress=cfg.compress,
+                        sample_dt_s=cfg.sample_dt_s)
+    autoscaler = None
+    if cfg.autoscale and adapter.kind == "platform":
+        autoscaler = Autoscaler(target, pool_min=cfg.pool_min,
+                                pool_max=cfg.pool_max, cover_s=cfg.cover_s)
+    gw = Gateway(adapter, workload,
+                 GatewayParams(n_workers=cfg.n_workers,
+                               queue_depth=cfg.queue_depth,
+                               slo_timeout_s=cfg.slo_timeout_s,
+                               tenant_rate=cfg.tenant_rate,
+                               tenant_burst=cfg.tenant_burst,
+                               compress=cfg.compress),
+                 recorder, autoscaler=autoscaler)
+
+    t0 = time.monotonic()
+    recorder.start(t0)
+    gw.start()
+    if autoscaler is not None:
+        autoscaler.start()
+    try:
+        load = LoadGenerator(trace, gw, cfg.compress).run(t0)
+        drained = gw.drain(timeout_s=cfg.drain_timeout_s)
+    finally:
+        gw.stop()
+        if autoscaler is not None:
+            autoscaler.stop()
+        recorder.stop()
+
+    n_nodes = len(target.nodes) if adapter.kind == "cluster" else 1
+    res = recorder.finish(n_nodes=n_nodes)
+    extras = {
+        **recorder.extras(),
+        "registered": n_registered,
+        "submitted": load.submitted,
+        "accepted": load.accepted,
+        "late_arrivals": load.late,
+        "max_lag_s": load.max_lag_s,
+        "wall_s": time.monotonic() - t0,
+        "drained": drained,
+        "autoscaler_resizes": autoscaler.resizes if autoscaler else 0,
+    }
+    return res, extras

@@ -1,0 +1,176 @@
+"""Target adapters: one duck-typed surface over the three live serving
+stacks the gateway can replay against.
+
+The gateway needs four things from whatever it fronts — invoke a
+function, sample fleet memory/runtime counts, read platform counters,
+and shut down. A raw ``HydraRuntime``, a single-node ``HydraPlatform``,
+and a multi-node ``HydraCluster`` expose those through different
+objects; the adapters normalize them so ``Gateway``/``Recorder`` never
+branch on the stack kind (mirroring how the sim engine never branches
+on a model name). Arrival-rate estimation needs no hook here: a
+cluster feeds its per-node estimators inside ``HydraCluster.invoke``,
+and a bare platform's pool is driven by the gateway's ``Autoscaler``.
+
+Memory accounting mirrors the simulator's: live bytes are the stack's
+own byte-accurate budget accounting, plus ``runtime_base_bytes`` of RSS
+per live runtime (the sim's ``hydra_runtime_base``), plus the same base
+for every pre-warmed pool slot — so a live replay and a sim replay of
+the same trace report comparable ``mean_mem``/``ops_per_gb_s``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.cluster import HydraCluster
+from repro.core.platform import HydraPlatform
+from repro.core.runtime import HydraRuntime
+
+MB = 1 << 20
+# per-runtime RSS estimate used for live memory accounting; matches the
+# sim's SimParams.hydra_runtime_base (paper Fig 5)
+DEFAULT_RUNTIME_BASE = 46 * MB
+
+
+class TargetAdapter:
+    """Common surface; see module docstring. ``kind`` names the stack."""
+
+    kind = ""
+
+    def __init__(self, target, runtime_base_bytes: int = DEFAULT_RUNTIME_BASE):
+        self.target = target
+        self.runtime_base = runtime_base_bytes
+
+    # -- request path ------------------------------------------------------
+    def invoke(self, fid: str, args):
+        return self.target.invoke(fid, args)
+
+    def register(self, fid: str, spec, *, tenant: str,
+                 mem_budget: Optional[int] = None) -> bool:
+        return self.target.register_function(fid, spec, tenant=tenant,
+                                             mem_budget=mem_budget)
+
+    # -- accounting --------------------------------------------------------
+    def _runtimes(self) -> list:
+        return []
+
+    def sample(self) -> dict:
+        """Point-in-time fleet sample: mem/pool bytes + runtime count."""
+        raise NotImplementedError
+
+    def counters(self) -> dict:
+        """Platform-level counters mapped onto the SimResult vocabulary:
+        ``cold_runtime`` (request-path boots), ``pool_claims``,
+        ``evicted_runtimes``, ``transfers``, plus summed per-runtime
+        isolate counters ``cold_isolate``/``warm_isolate``."""
+        raise NotImplementedError
+
+    def _isolate_counts(self) -> tuple:
+        cold = warm = 0
+        for rt in self._runtimes():
+            c = rt.metrics.counters
+            cold += c.get("arena.cold", 0)
+            warm += c.get("arena.warm", 0)
+        return cold, warm
+
+    def shutdown(self) -> None:
+        self.target.shutdown()
+
+
+class RuntimeTarget(TargetAdapter):
+    """One raw ``HydraRuntime``: no pool, no platform cold starts — the
+    single-process baseline."""
+
+    kind = "runtime"
+
+    def _runtimes(self) -> list:
+        return [self.target]
+
+    def sample(self) -> dict:
+        rt: HydraRuntime = self.target
+        return {"mem_bytes": rt.budget.used + self.runtime_base,
+                "pool_bytes": 0, "runtimes": 1}
+
+    def counters(self) -> dict:
+        cold_iso, warm_iso = self._isolate_counts()
+        return {"cold_runtime": 0, "pool_claims": 0,
+                "evicted_runtimes": 0, "transfers": 0,
+                "cold_isolate": cold_iso, "warm_isolate": warm_iso}
+
+
+class PlatformTarget(TargetAdapter):
+    """A single-node ``HydraPlatform``: ``pool.miss`` is the live analog
+    of the sim's request-path runtime cold start (the pool was dry and a
+    runtime booted inline); ``pool.claim`` is a warm pool handover."""
+
+    kind = "platform"
+
+    def _runtimes(self) -> list:
+        return self.target.runtimes()
+
+    def sample(self) -> dict:
+        plat: HydraPlatform = self.target
+        s = plat.stats()
+        total = s["runtimes_active"] + s["runtimes_pooled"]
+        return {"mem_bytes": s["budget_used"] + total * self.runtime_base,
+                "pool_bytes": s["runtimes_pooled"] * self.runtime_base,
+                "runtimes": total}
+
+    def counters(self) -> dict:
+        c = self.target.metrics.counters
+        cold_iso, warm_iso = self._isolate_counts()
+        return {"cold_runtime": c.get("pool.miss", 0),
+                "pool_claims": c.get("pool.claim", 0),
+                "evicted_runtimes": c.get("runtime.shutdowns", 0),
+                "transfers": 0,
+                "cold_isolate": cold_iso, "warm_isolate": warm_iso}
+
+
+class ClusterTarget(TargetAdapter):
+    """A multi-node ``HydraCluster``: per-node platform counters are
+    summed fleet-wide; arrivals feed the cluster's own per-node adaptive
+    pool sizing (so no gateway Autoscaler is attached)."""
+
+    kind = "cluster"
+
+    def _platforms(self) -> list:
+        return [node.platform for node in self.target.nodes]
+
+    def _runtimes(self) -> list:
+        return [rt for p in self._platforms() for rt in p.runtimes()]
+
+    def sample(self) -> dict:
+        mem = pool = runtimes = 0
+        for p in self._platforms():
+            s = p.stats()
+            total = s["runtimes_active"] + s["runtimes_pooled"]
+            mem += s["budget_used"] + total * self.runtime_base
+            pool += s["runtimes_pooled"] * self.runtime_base
+            runtimes += total
+        return {"mem_bytes": mem, "pool_bytes": pool, "runtimes": runtimes}
+
+    def counters(self) -> dict:
+        cold = claims = evicted = 0
+        for p in self._platforms():
+            c = p.metrics.counters
+            cold += c.get("pool.miss", 0)
+            claims += c.get("pool.claim", 0)
+            evicted += c.get("runtime.shutdowns", 0)
+        cold_iso, warm_iso = self._isolate_counts()
+        cluster: HydraCluster = self.target
+        return {"cold_runtime": cold, "pool_claims": claims,
+                "evicted_runtimes": evicted,
+                "transfers": cluster.metrics.counters.get("migrations", 0),
+                "cold_isolate": cold_iso, "warm_isolate": warm_iso}
+
+
+def wrap_target(target, runtime_base_bytes: int = DEFAULT_RUNTIME_BASE
+                ) -> TargetAdapter:
+    """Adapter for a runtime/platform/cluster instance."""
+    if isinstance(target, HydraCluster):
+        return ClusterTarget(target, runtime_base_bytes)
+    if isinstance(target, HydraPlatform):
+        return PlatformTarget(target, runtime_base_bytes)
+    if isinstance(target, HydraRuntime):
+        return RuntimeTarget(target, runtime_base_bytes)
+    raise TypeError(f"gateway cannot front {type(target).__name__}; "
+                    "expected HydraRuntime, HydraPlatform, or HydraCluster")

@@ -1,0 +1,233 @@
+"""Sim-vs-real validation: replay ONE trace through both the live
+gateway stack and the discrete-event simulator, and diff the results.
+
+``core/calibrate.py`` closes the loop in one direction (measured costs
+flow into the simulator's constants); this harness closes it in the
+other: the simulator's *predictions* are checked against the real
+``HydraPlatform`` under the identical (thinned) trace. Per-metric
+deltas are reported for cold starts, pool claims, p50/p99, memory, and
+density; the **cold-start count** is the enforced gate —
+
+    |live_cold - sim_cold| <= atol + rtol * sim_cold
+
+with ``atol=8``/``rtol=1.0`` by default (documented in
+docs/benchmarks.md). The gate is deliberately coarse: live timing
+jitters and the sim packs by per-invocation memory while the platform
+packs by per-function estimate, so exact counts never match — but a
+regression that defeats the warm pool (every request cold-booting)
+blows past any sane tolerance, and that regression class is what CI's
+``gateway-smoke`` job exists to catch. Latency deltas are reported, not
+enforced: real startup costs do not compress with the replay clock, so
+live trace-time percentiles carry a known ``compress``-amplified
+startup term.
+
+For comparability the live side runs with a FIXED pool (autoscaling
+off) sized like the sim model's, no SLO timeout, and no tenant
+throttling; the sim side gets ``keepalive_s`` stretched past the trace
+horizon because a live platform never expires a placed function.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.gateway.validate \\
+        --trace-file benchmarks/data/azure_sample.csv \\
+        --target-rps 2 --max-minutes 10 --compress 120
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import sys
+from typing import Optional
+
+from repro.core.platform import HydraPlatform, PlatformParams
+from repro.core.sim import SimParams, simulate
+from repro.core.traces import Trace, discover_azure_tables
+from repro.gateway.replay import ReplayConfig, replay_trace
+
+# enforced cold-start gate: |live - sim| <= COLD_ATOL + COLD_RTOL * sim
+COLD_ATOL = 8
+COLD_RTOL = 1.0
+
+# per-metric deltas reported (summary-schema keys)
+DELTA_KEYS = ("requests", "dropped", "cold_runtime", "pool_claims",
+              "p50_s", "p99_s", "mean_mem_mb", "ops_per_gb_s")
+
+
+def load_trace(trace_file: Optional[str] = None,
+               target_rps: Optional[float] = None,
+               max_minutes: Optional[int] = None,
+               seed: int = 0, **synthetic_kw) -> Trace:
+    """An Azure-format trace (sibling duration/memory tables
+    auto-discovered) when ``trace_file`` is given, else the synthetic
+    Shahrad-calibrated generator."""
+    if trace_file:
+        return Trace.from_azure(trace_file,
+                                **discover_azure_tables(trace_file),
+                                target_rps=target_rps,
+                                max_minutes=max_minutes, seed=seed)
+    kw = dict(n_functions=24, n_tenants=8, duration_s=120.0, mean_rps=3.0,
+              seed=seed)
+    kw.update(synthetic_kw)
+    return Trace.synthetic(**kw)
+
+
+def sim_params_for_live(trace, *, pool_size: int,
+                        live_runtime_budget: int, mem_scale: float,
+                        base: Optional[SimParams] = None) -> SimParams:
+    """Map the live platform's configuration onto ``SimParams`` so the
+    two replays model the same deployment: same pool target, the
+    per-runtime cap un-scaled back to trace bytes, and keep-alive
+    stretched past the horizon (a live platform never expires a placed
+    function — only idle arenas TTL out)."""
+    base = base or SimParams()
+    return dataclasses.replace(
+        base,
+        pool_size=pool_size,
+        runtime_cap=max(base.runtime_cap,
+                        int(live_runtime_budget / mem_scale)),
+        keepalive_s=max(base.keepalive_s, trace.duration_s + 120.0),
+    )
+
+
+def run_validation(trace, *, compress: float = 60.0, pool_size: int = 4,
+                   mem_scale: float = 1.0 / 64,
+                   runtime_budget: Optional[int] = None,
+                   model: str = "hydra-pool",
+                   atol: int = COLD_ATOL, rtol: float = COLD_RTOL,
+                   n_workers: int = 8,
+                   sim_base: Optional[SimParams] = None) -> dict:
+    """Replay ``trace`` live and simulated; return the delta report."""
+    base = sim_base or SimParams()
+    live_budget = runtime_budget or max(
+        4 << 20, int(base.runtime_cap * mem_scale))
+    # isolate TTLs are trace-time semantics: compress them with the
+    # replay clock, or idle arenas pin runtime budgets for the entire
+    # compressed replay and every burst OOMs
+    platform = HydraPlatform(PlatformParams(
+        pool_size=pool_size, runtime_budget_bytes=live_budget,
+        arena_ttl_s=base.isolate_ttl_s / compress, n_workers=4))
+    cfg = ReplayConfig(compress=compress, mem_scale=mem_scale,
+                       n_workers=n_workers, autoscale=False,
+                       slo_timeout_s=None, tenant_rate=None)
+    try:
+        live, extras = replay_trace(trace, platform, cfg)
+    finally:
+        platform.shutdown()
+
+    params = sim_params_for_live(trace, pool_size=pool_size,
+                                 live_runtime_budget=live_budget,
+                                 mem_scale=mem_scale, base=base)
+    sim = simulate(trace, model, params)
+
+    live_s, sim_s = live.summary(), sim.summary()
+    deltas = {}
+    for k in DELTA_KEYS:
+        lv, sv = live_s.get(k), sim_s.get(k)
+        deltas[k] = {"live": lv, "sim": sv,
+                     "delta": (lv - sv)
+                     if isinstance(lv, (int, float))
+                     and isinstance(sv, (int, float)) else None}
+
+    cold_live = live.cold_runtime_starts
+    cold_sim = sim.cold_runtime_starts
+    cold_limit = atol + rtol * cold_sim
+    cold_delta = abs(cold_live - cold_sim)
+
+    failures = []
+    if not live_s["requests"]:
+        failures.append("live replay served zero requests")
+    if not sim_s["requests"]:
+        failures.append("sim replay served zero requests")
+    for side, s in (("live", live_s), ("sim", sim_s)):
+        for k in ("p50_s", "p99_s", "mean_mem_mb"):
+            v = s.get(k)
+            if v is None or not math.isfinite(v):
+                failures.append(f"{side} {k} is not finite ({v})")
+    if not extras.get("drained", True):
+        failures.append("gateway did not drain before the timeout")
+    err_n = extras.get("drops", {}).get("error", 0)
+    if err_n > max(1, 0.01 * len(trace)):
+        failures.append(f"{err_n} invoke errors (>1% of the trace): "
+                        f"{extras.get('errors', [])[:3]}")
+    if cold_delta > cold_limit:
+        failures.append(
+            f"cold-start divergence {cold_delta} beyond tolerance "
+            f"{cold_limit:.1f} (live={cold_live}, sim={cold_sim}, "
+            f"atol={atol}, rtol={rtol})")
+
+    return {
+        "trace": trace.describe(),
+        "live": live_s, "sim": sim_s, "deltas": deltas,
+        "extras": extras,
+        "tolerance": {"atol": atol, "rtol": rtol, "limit": cold_limit,
+                      "cold_live": cold_live, "cold_sim": cold_sim,
+                      "cold_delta": cold_delta,
+                      "passed": cold_delta <= cold_limit},
+        "failures": failures,
+        "ok": not failures,
+    }
+
+
+def format_report(report: dict) -> str:
+    lines = [f"{'metric':>14s} {'live':>12s} {'sim':>12s} {'delta':>12s}"]
+    for k, d in report["deltas"].items():
+        def fmt(v):
+            if v is None:
+                return "-"
+            return f"{v:.4f}" if isinstance(v, float) else str(v)
+        lines.append(f"{k:>14s} {fmt(d['live']):>12s} {fmt(d['sim']):>12s} "
+                     f"{fmt(d['delta']):>12s}")
+    tol = report["tolerance"]
+    lines.append(f"cold-start gate: |{tol['cold_live']} - {tol['cold_sim']}|"
+                 f" = {tol['cold_delta']} <= {tol['limit']:.1f} -> "
+                 f"{'PASS' if tol['passed'] else 'FAIL'}")
+    for f in report["failures"]:
+        lines.append(f"FAIL: {f}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Replay one trace through the live gateway stack AND "
+                    "the simulator; report per-metric deltas and enforce "
+                    "the cold-start tolerance.")
+    ap.add_argument("--trace-file", default=None,
+                    help="Azure Functions 2019-format invocations CSV "
+                         "(default: a small synthetic trace)")
+    ap.add_argument("--target-rps", type=float, default=None)
+    ap.add_argument("--max-minutes", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compress", type=float, default=60.0,
+                    help="trace seconds replayed per wall second")
+    ap.add_argument("--pool", type=int, default=4,
+                    help="pre-warmed pool size (live and sim)")
+    ap.add_argument("--mem-scale", type=float, default=1.0 / 64)
+    ap.add_argument("--model", default="hydra-pool")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--atol", type=int, default=COLD_ATOL)
+    ap.add_argument("--rtol", type=float, default=COLD_RTOL)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full report as JSON")
+    args = ap.parse_args(argv)
+
+    trace = load_trace(args.trace_file, target_rps=args.target_rps,
+                       max_minutes=args.max_minutes, seed=args.seed)
+    d = trace.describe()
+    print(f"[validate] trace: {d['invocations']} invocations, "
+          f"{d['functions']} fns, {d['tenants']} tenants over "
+          f"{d['duration_s']:.0f}s (compress {args.compress:g}x -> "
+          f"~{d['duration_s'] / args.compress:.1f}s wall)")
+    report = run_validation(trace, compress=args.compress,
+                            pool_size=args.pool, mem_scale=args.mem_scale,
+                            model=args.model, n_workers=args.workers,
+                            atol=args.atol, rtol=args.rtol)
+    print(format_report(report))
+    if args.json:
+        print(json.dumps(report, indent=1, sort_keys=True, default=str))
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

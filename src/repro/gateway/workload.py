@@ -1,0 +1,115 @@
+"""Trace → live functions: materialize a ``Trace``'s integer fids as
+real registered functions on a runtime/platform/cluster.
+
+The simulator replays abstract invocations; the live gateway needs each
+trace function to exist on the real stack — registered, AOT-compiled,
+placeable, snapshotable. Every trace fid becomes a tiny ``CallableSpec``
+(one jitted affine program, identical shapes for all functions, so the
+whole workload shares ONE compiled executable through the fleet
+``ExecutableCache`` — code-cache sharing exactly as the paper's
+same-language tenants do) with per-function weights and a per-function
+arena sized from the trace's memory column.
+
+Trace memory is scaled by ``mem_scale`` (default 1/64) so a dataset
+whose functions average ~140 MB replays on CI hardware: a 128 MB trace
+function becomes a 2 MB arena. Scale the runtime/node budgets by the
+same factor to preserve the sim's packing ratios
+(``scaled_runtime_budget`` does this) — the *shape* of placement,
+pool churn, and cold starts is preserved while absolute bytes shrink.
+
+The invocation's *duration* is emulated by the gateway worker (which
+sleeps ``duration_s / compress`` after the real invoke), not here: a
+jitted program cannot sleep, and the real code path — registry lookup,
+arena acquire, executable call — is exactly what we want measured.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.registry import CallableSpec
+
+MB = 1 << 20
+VEC = 64                      # element count of the emulated program
+
+
+def _affine(params, args):
+    return {"y": args["x"] * params["w"] + params["b"]}
+
+
+@dataclass
+class TraceWorkload:
+    """Registered live twins of a trace's functions.
+
+    ``fid_name``/``tenant_name`` define the stable naming scheme
+    (``fn00017`` / ``tenant0003``); ``register_all`` admits every
+    function appearing in the trace (placement stays lazy — the first
+    live invocation claims/packs a runtime, which is the cold-start
+    path under measurement); ``args_for`` builds the invocation payload.
+    """
+    mem_scale: float = 1.0 / 64
+    min_arena_bytes: int = 256 * 1024
+    # cap so even the biggest trace function stays admissible on one
+    # runtime (a function's placement estimate is ~2 arenas); None = no cap
+    max_arena_bytes: Optional[int] = None
+    registered: dict = field(default_factory=dict)   # fid -> (name, tenant)
+
+    @staticmethod
+    def fid_name(fid: int) -> str:
+        return f"fn{fid:05d}"
+
+    @staticmethod
+    def tenant_name(tenant: int) -> str:
+        return f"tenant{tenant:04d}"
+
+    def arena_bytes(self, mem_bytes: int) -> int:
+        nb = max(self.min_arena_bytes, int(mem_bytes * self.mem_scale))
+        if self.max_arena_bytes is not None:
+            nb = min(nb, self.max_arena_bytes)
+        return nb
+
+    def spec_for(self, fid: int, mem_bytes: int) -> CallableSpec:
+        # one program name + identical shapes for every function: the
+        # executable compiles once and is shared fleet-wide; weights
+        # differ per function (they are arguments, not closed over)
+        w = jnp.full((VEC,), 1.0 + (fid % 13) * 0.5, jnp.float32)
+        b = jnp.full((VEC,), float(fid % 7), jnp.float32)
+        return CallableSpec(name="trace-emulated", fn=_affine,
+                            example_args={"x": jnp.ones((VEC,), jnp.float32)},
+                            params={"w": w, "b": b},
+                            arena_bytes=self.arena_bytes(mem_bytes))
+
+    def register_all(self, trace, adapter) -> int:
+        """Register every distinct function in ``trace`` on the adapted
+        target. Returns the number of functions registered."""
+        seen: dict = {}
+        for inv in trace:
+            if inv.fid not in seen:
+                seen[inv.fid] = inv
+        n = 0
+        for fid, inv in sorted(seen.items()):
+            name = self.fid_name(fid)
+            tenant = self.tenant_name(inv.tenant)
+            adapter.register(name, self.spec_for(fid, inv.mem_bytes),
+                             tenant=tenant)
+            self.registered[fid] = (name, tenant)
+            n += 1
+        return n
+
+    def args_for(self, inv) -> dict:
+        return {"x": jnp.full((VEC,), float(inv.fid % 11), jnp.float32)}
+
+    def name_for(self, inv):
+        entry = self.registered.get(inv.fid)
+        return entry[0] if entry else None
+
+
+def scaled_runtime_budget(sim_runtime_cap: int,
+                          mem_scale: float = 1.0 / 64,
+                          floor_bytes: int = 4 * MB) -> int:
+    """Map a simulator per-runtime cap onto a live runtime budget at the
+    workload's memory scale, so live packing saturates at the same
+    functions-per-runtime ratio the sim models."""
+    return max(floor_bytes, int(sim_runtime_cap * mem_scale))

@@ -1,11 +1,23 @@
 """Multi-tenant serving driver: HydraCluster/HydraPlatform/HydraRuntime +
-continuous batching.
+continuous batching, plus the live trace-replay gateway.
 
-Registers N tenant functions (optionally different architectures) and
-replays a synthetic request stream, reporting density metrics: cold/warm
-starts, executable-cache sharing, arena-pool behaviour, latency.
+Two modes:
 
-Serving stack is selected by flags:
+**Closed-loop LM serving** (default): registers N tenant functions
+(optionally different architectures) and replays a synthetic request
+stream through continuous batchers, reporting density metrics:
+cold/warm starts, executable-cache sharing, arena-pool behaviour,
+latency.
+
+**Open-loop gateway replay** (``--gateway``): replays a trace — an
+Azure Functions 2019 CSV via ``--trace-file``, or the synthetic
+generator — in wall-clock time against the selected live stack through
+``repro.gateway``: per-tenant bounded queues, admission control, SLO
+timeouts, background pool autoscaling, and a ``SimResult``-schema
+summary directly comparable with ``repro.core.sim`` output.
+``--compress`` sets how many trace seconds replay per wall second.
+
+Serving stack is selected by flags (both modes):
 
   * ``--nodes K`` (K >= 2) — a ``HydraCluster`` of K single-machine
     platforms: colocation-aware cross-node placement, snapshot migration,
@@ -25,6 +37,9 @@ for cluster migration).
 
   PYTHONPATH=src python -m repro.launch.serve --tenants 4 --requests 16 \\
       --nodes 2 --pool 1
+
+  PYTHONPATH=src python -m repro.launch.serve --gateway \\
+      --trace-file benchmarks/data/azure_sample.csv --compress 60
 """
 from __future__ import annotations
 
@@ -48,6 +63,28 @@ def make_params(cfg, seed: int = 0):
     return jax.tree.map(
         lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x,
         params)
+
+
+def build_target(args, arena_ttl_s=None):
+    """The serving stack selected by --nodes/--pool — one construction
+    path shared by the closed-loop driver and gateway mode, so the same
+    flags always mean the same deployment. ``arena_ttl_s`` overrides
+    the isolate keep-alive (gateway mode compresses it); None keeps the
+    stack defaults."""
+    budget = int(args.runtime_budget_gb * (1 << 30))
+    ttl = {} if arena_ttl_s is None else {"arena_ttl_s": arena_ttl_s}
+    if args.nodes >= 2:
+        return HydraCluster(ClusterParams(
+            n_nodes=args.nodes,
+            node_memory_bytes=int(args.node_memory_gb * (1 << 30)),
+            snapshot_dir=args.snapshot_dir,
+            platform=PlatformParams(pool_size=max(args.pool, 1),
+                                    runtime_budget_bytes=budget, **ttl)))
+    if args.pool > 0:
+        return HydraPlatform(PlatformParams(
+            pool_size=args.pool, runtime_budget_bytes=budget,
+            snapshot_dir=args.snapshot_dir, **ttl))
+    return HydraRuntime(memory_budget_bytes=budget, **ttl)
 
 
 def main(argv=None):
@@ -74,31 +111,53 @@ def main(argv=None):
                          "boot, register, restore) as a "
                          "hydra-calibration/v1 JSON for the trace "
                          "simulator (see bench_trace --calibration)")
+    # ---- gateway mode: open-loop wall-clock trace replay ----
+    ap.add_argument("--gateway", action="store_true",
+                    help="replay a trace open-loop in wall-clock time "
+                         "through the serving gateway (repro.gateway) "
+                         "instead of the closed-loop LM driver")
+    ap.add_argument("--trace-file", default=None,
+                    help="Azure Functions 2019-format invocations CSV "
+                         "(gateway mode; default: a synthetic trace)")
+    ap.add_argument("--compress", type=float, default=60.0,
+                    help="trace seconds replayed per wall second "
+                         "(gateway mode)")
+    ap.add_argument("--target-rps", type=float, default=None,
+                    help="deterministically thin the trace to this mean "
+                         "rps (gateway mode)")
+    ap.add_argument("--max-minutes", type=int, default=None,
+                    help="replay only the first N trace minutes "
+                         "(gateway mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mem-scale", type=float, default=1.0 / 64,
+                    help="trace function memory -> live arena scale "
+                         "(gateway mode)")
+    ap.add_argument("--gw-workers", type=int, default=16,
+                    help="gateway worker threads (gateway mode)")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="per-tenant gateway queue bound (gateway mode)")
+    ap.add_argument("--slo-timeout", type=float, default=None,
+                    help="drop requests older than this many TRACE "
+                         "seconds instead of serving them late "
+                         "(gateway mode)")
+    ap.add_argument("--tenant-rate", type=float, default=None,
+                    help="per-tenant token-bucket rate in trace req/s "
+                         "(gateway mode)")
     args = ap.parse_args(argv)
 
-    budget = int(args.runtime_budget_gb * (1 << 30))
-    platform = None
-    if args.nodes >= 2:
-        platform = HydraCluster(ClusterParams(
-            n_nodes=args.nodes,
-            node_memory_bytes=int(args.node_memory_gb * (1 << 30)),
-            snapshot_dir=args.snapshot_dir,
-            platform=PlatformParams(pool_size=max(args.pool, 1),
-                                    runtime_budget_bytes=budget)))
+    if args.gateway:
+        return run_gateway(args)
+
+    target = build_target(args)
+    if isinstance(target, (HydraCluster, HydraPlatform)):
+        platform = target
         # eager: place + AOT-compile at registration so t_reg measures the
         # real install cost and no request pays a cold start
         register = lambda fid, spec, tenant: platform.register_function(
             fid, spec, tenant=tenant, eager=True)
         runtime_for = platform.runtime_for
-    elif args.pool > 0:
-        platform = HydraPlatform(pool_size=args.pool,
-                                 runtime_budget_bytes=budget,
-                                 snapshot_dir=args.snapshot_dir)
-        register = lambda fid, spec, tenant: platform.register_function(
-            fid, spec, tenant=tenant, eager=True)
-        runtime_for = platform.runtime_for
     else:
-        rt = HydraRuntime(memory_budget_bytes=budget)
+        platform, rt = None, target
         register = rt.register_function
         runtime_for = lambda fid: rt
 
@@ -183,6 +242,55 @@ def main(argv=None):
         rts = list({id(b.rt): b.rt for b in batchers.values()}.values())
         emit_calibration(args.calibration, platform, rts)
     return s
+
+
+def run_gateway(args) -> dict:
+    """Open-loop wall-clock trace replay through ``repro.gateway``
+    against the stack selected by --nodes/--pool. Prints the live
+    result in the simulator's SimResult summary schema and returns it."""
+    import json
+
+    from repro.core.sim import SimParams
+    from repro.gateway import ReplayConfig, load_trace, replay_trace
+
+    trace = load_trace(args.trace_file, target_rps=args.target_rps,
+                       max_minutes=args.max_minutes, seed=args.seed)
+    d = trace.describe()
+    print(f"[gateway] trace: {d['invocations']} invocations, "
+          f"{d['functions']} fns, {d['tenants']} tenants over "
+          f"{d['duration_s']:.0f}s trace time "
+          f"(~{d['duration_s'] / args.compress:.1f}s wall at "
+          f"{args.compress:g}x)")
+
+    # trace-time TTL semantics must follow the replay clock: the sim's
+    # isolate keep-alive, however fast the trace replays (same mapping
+    # as gateway/validate.py, so both entry points stay comparable)
+    target = build_target(
+        args, arena_ttl_s=SimParams().isolate_ttl_s / args.compress)
+
+    cfg = ReplayConfig(compress=args.compress, mem_scale=args.mem_scale,
+                       n_workers=args.gw_workers,
+                       queue_depth=args.queue_depth,
+                       slo_timeout_s=args.slo_timeout,
+                       tenant_rate=args.tenant_rate)
+    try:
+        res, extras = replay_trace(trace, target, cfg)
+    finally:
+        target.shutdown()
+
+    summary = res.summary()
+    served = summary["requests"]
+    print(f"[gateway] served {served}/{extras['submitted']} requests in "
+          f"{extras['wall_s']:.1f}s wall ({extras['registered']} functions "
+          f"registered, {extras['late_arrivals']} late submits, "
+          f"max lag {extras['max_lag_s'] * 1e3:.0f}ms)")
+    print(f"[gateway] drops: {extras['drops']} retries: "
+          f"{extras['retries']} autoscaler resizes: "
+          f"{extras['autoscaler_resizes']}")
+    if extras["errors"]:
+        print(f"[gateway] errors (sample): {extras['errors'][:3]}")
+    print(json.dumps(summary, indent=1, sort_keys=True, default=str))
+    return summary
 
 
 def emit_calibration(path, platform, runtimes) -> dict:

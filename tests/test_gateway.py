@@ -1,0 +1,235 @@
+"""Gateway subsystem: open-loop wall-clock replay against the real
+stack — admission control (bounded queues, token buckets), SLO
+timeouts, the platform autoscaler, SimResult-schema recording, and the
+sim-vs-live validation harness."""
+import time
+
+import pytest
+
+from repro.core.platform import HydraPlatform, PlatformParams
+from repro.core.sim.engine import SimResult
+from repro.core.traces import Invocation, Trace
+from repro.gateway import (Autoscaler, Gateway, GatewayParams, LoadGenerator,
+                           Recorder, ReplayConfig, replay_trace,
+                           run_validation, wrap_target)
+from repro.gateway.replay import build_workload
+
+MB = 1 << 20
+
+
+def make_trace(n=24, gap_s=0.5, duration_s=0.2, n_fns=4, n_tenants=2,
+               mem_mb=80):
+    invs = tuple(
+        Invocation(t=i * gap_s, fid=i % n_fns, tenant=(i % n_fns) % n_tenants,
+                   duration_s=duration_s, mem_bytes=mem_mb * MB)
+        for i in range(n))
+    return Trace(invocations=invs, source="synthetic")
+
+
+def small_platform(compress=30.0, pool=1, budget=64 * MB):
+    return HydraPlatform(PlatformParams(
+        pool_size=pool, runtime_budget_bytes=budget,
+        arena_ttl_s=10.0 / compress, n_workers=2))
+
+
+# ---------------------------------------------------------------------------
+def test_replay_emits_simresult_schema_and_full_accounting():
+    trace = make_trace(n=24, gap_s=0.4)
+    plat = small_platform(compress=30.0)
+    try:
+        res, extras = replay_trace(trace, plat,
+                                   ReplayConfig(compress=30.0, n_workers=4))
+    finally:
+        plat.shutdown()
+    assert isinstance(res, SimResult)
+    # EXACT summary schema parity with the simulator
+    assert set(res.summary()) == set(SimResult(model="x").summary())
+    s = res.summary()
+    assert s["requests"] + s["dropped"] == len(trace)
+    assert s["requests"] > 0
+    assert all(l > 0 for l in res.latencies)
+    # the pool served the first placement: a claim, never an inline boot
+    assert s["pool_claims"] >= 1
+    assert s["cold_runtime"] == 0
+    assert res.mem_samples and res.mem_samples[-1][1] > 0
+    assert extras["submitted"] == len(trace)
+    assert extras["drained"]
+
+
+def test_replay_against_cluster_target():
+    from repro.core.cluster import ClusterParams, HydraCluster
+    trace = make_trace(n=16, gap_s=0.4, n_fns=4, n_tenants=4)
+    cluster = HydraCluster(ClusterParams(
+        n_nodes=2, node_memory_bytes=256 * MB,
+        platform=PlatformParams(pool_size=1, runtime_budget_bytes=64 * MB,
+                                arena_ttl_s=10.0 / 30.0)))
+    try:
+        res, extras = replay_trace(trace, cluster,
+                                   ReplayConfig(compress=30.0, n_workers=4))
+    finally:
+        cluster.shutdown()
+    s = res.summary()
+    assert res.model == "live-cluster"
+    assert s["n_nodes"] == 2
+    assert s["requests"] + s["dropped"] == len(trace)
+    assert s["requests"] > 0
+
+
+# ---------------------------------------------------------------------------
+def _gateway_fixture(trace, plat, params):
+    adapter = wrap_target(plat)
+    workload = build_workload(adapter, ReplayConfig(compress=params.compress))
+    workload.register_all(trace, adapter)
+    recorder = Recorder(adapter, compress=params.compress)
+    gw = Gateway(adapter, workload, params, recorder)
+    return gw, recorder
+
+
+def test_bounded_queue_rejects_overflow():
+    # 1 worker busy sleeping 0.5s wall per request; depth 2 -> the burst
+    # overflows the tenant queue and is rejected at the door
+    trace = make_trace(n=8, gap_s=0.0, duration_s=0.5, n_fns=1, n_tenants=1)
+    plat = small_platform(compress=1.0)
+    gw, recorder = _gateway_fixture(
+        trace, plat, GatewayParams(n_workers=1, queue_depth=2, compress=1.0))
+    try:
+        gw.start()
+        accepted = sum(gw.submit(inv) for inv in trace)
+        assert accepted < len(trace)
+        assert gw.drain(timeout_s=30.0)
+    finally:
+        gw.stop()
+        plat.shutdown()
+    extras = recorder.extras()
+    assert extras["drops"].get("rejected", 0) >= 1
+    res = recorder.finish()
+    assert len(res.latencies) + res.dropped == len(trace)
+
+
+def test_slo_timeout_drops_stale_requests():
+    # sub-ms SLO (in trace seconds) with a single busy worker: queued
+    # requests expire before they are served
+    trace = make_trace(n=6, gap_s=0.0, duration_s=0.4, n_fns=1, n_tenants=1)
+    plat = small_platform(compress=1.0)
+    gw, recorder = _gateway_fixture(
+        trace, plat, GatewayParams(n_workers=1, queue_depth=64,
+                                   slo_timeout_s=0.05, compress=1.0))
+    try:
+        gw.start()
+        for inv in trace:
+            gw.submit(inv)
+        assert gw.drain(timeout_s=30.0)
+    finally:
+        gw.stop()
+        plat.shutdown()
+    assert recorder.extras()["drops"].get("slo_timeout", 0) >= 1
+
+
+def test_token_bucket_throttles_hot_tenant():
+    trace = make_trace(n=10, gap_s=0.0, duration_s=0.01, n_fns=1,
+                       n_tenants=1)
+    plat = small_platform(compress=1.0)
+    gw, recorder = _gateway_fixture(
+        trace, plat, GatewayParams(n_workers=2, tenant_rate=0.001,
+                                   tenant_burst=2.0, compress=1.0))
+    try:
+        gw.start()
+        for inv in trace:
+            gw.submit(inv)
+        gw.drain(timeout_s=30.0)
+    finally:
+        gw.stop()
+        plat.shutdown()
+    drops = recorder.extras()["drops"]
+    # burst of 2 admitted, the rest throttled by the per-tenant bucket
+    assert drops.get("throttled", 0) >= len(trace) - 3
+
+
+def test_unknown_function_rejected_at_door():
+    plat = small_platform()
+    gw, recorder = _gateway_fixture(make_trace(n=4), plat, GatewayParams())
+    try:
+        stranger = Invocation(t=0.0, fid=999, tenant=0, duration_s=0.1,
+                              mem_bytes=MB)
+        assert gw.submit(stranger) is False
+    finally:
+        gw.stop()
+        plat.shutdown()
+    assert recorder.extras()["drops"].get("unknown") == 1
+
+
+# ---------------------------------------------------------------------------
+def test_autoscaler_grows_on_burst_and_shrinks_when_idle():
+    plat = small_platform(pool=1)
+    try:
+        scaler = Autoscaler(plat, pool_min=1, pool_max=4, cover_s=1.0)
+        t = 1000.0
+        for i in range(32):            # 100 req/s burst
+            scaler.observe(t + i * 0.01)
+        target = scaler.tick(t + 0.32)
+        assert target == 4             # ceil(rate * cover) clamped to max
+        assert plat.params.pool_size == 4
+        assert scaler.resizes == 1
+        # long idle: the rate estimate collapses, pool shrinks to floor
+        target = scaler.tick(t + 500.0)
+        assert target == 1
+        assert plat.params.pool_size == 1
+    finally:
+        plat.shutdown()
+
+
+def test_workload_arenas_capped_to_runtime_budget():
+    # 8 GB trace functions against a 16 MB runtime: arenas are capped so
+    # registration always admits (no HydraOOMError at the door)
+    trace = make_trace(n=4, n_fns=2, mem_mb=8192)
+    plat = HydraPlatform(PlatformParams(pool_size=1,
+                                        runtime_budget_bytes=16 * MB))
+    try:
+        adapter = wrap_target(plat)
+        workload = build_workload(adapter, ReplayConfig())
+        n = workload.register_all(trace, adapter)
+        assert n == 2
+        for inv in trace[:2]:
+            adapter.invoke(workload.name_for(inv), workload.args_for(inv))
+    finally:
+        plat.shutdown()
+
+
+def test_loadgen_schedules_open_loop():
+    class StubGateway:
+        def __init__(self):
+            self.walls = []
+
+        def submit(self, inv, sched_wall=None):
+            self.walls.append((time.monotonic(), sched_wall))
+            return True
+
+    trace = make_trace(n=5, gap_s=1.0)     # arrivals at 0, 1, 2, 3, 4
+    stub = StubGateway()
+    res = LoadGenerator(trace, stub, compress=20.0).run()
+    assert res.submitted == res.accepted == 5
+    # open loop: submit times track the compressed schedule (50ms gaps)
+    gaps = [b - a for (a, _), (b, _) in zip(stub.walls, stub.walls[1:])]
+    assert all(0.03 < g < 0.3 for g in gaps), gaps
+    # intended schedule is preserved exactly
+    scheds = [s for _, s in stub.walls]
+    for i in range(1, 5):
+        assert scheds[i] - scheds[0] == pytest.approx(i * 0.05, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+def test_validation_report_on_synthetic_trace():
+    trace = Trace.synthetic(n_functions=8, n_tenants=4, duration_s=40.0,
+                            mean_rps=1.5, seed=3)
+    report = run_validation(trace, compress=40.0, pool_size=2,
+                            n_workers=4)
+    assert set(report) >= {"live", "sim", "deltas", "tolerance",
+                           "failures", "ok"}
+    tol = report["tolerance"]
+    assert tol["passed"], report["failures"]
+    assert report["live"]["requests"] > 0
+    assert report["sim"]["requests"] == len(trace)
+    for k in ("cold_runtime", "p99_s", "requests"):
+        assert k in report["deltas"]
+    # live and sim agree that the pre-warmed pool absorbed the load
+    assert abs(tol["cold_live"] - tol["cold_sim"]) <= tol["limit"]

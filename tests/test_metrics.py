@@ -1,0 +1,107 @@
+"""Metrics thread-safety: counters, histograms, and snapshots hammered
+from many threads must lose nothing and never raise (gateway workers,
+refill threads, and the janitor all write the same Metrics object)."""
+import math
+import threading
+
+from repro.core.metrics import Histogram, Metrics
+
+N_THREADS = 8
+N_OPS = 500
+
+
+def _run_threads(fn):
+    errors = []
+    start = threading.Barrier(N_THREADS)
+
+    def wrap(i):
+        try:
+            start.wait(timeout=10.0)   # all threads hammer at once
+            fn(i)
+        except Exception as e:      # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=wrap, args=(i,))
+               for i in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not errors, errors
+
+
+def test_counter_hammer_loses_no_increments():
+    m = Metrics()
+
+    def work(i):
+        for _ in range(N_OPS):
+            m.inc("shared")
+            m.inc(f"per.{i % 3}", 2)
+
+    _run_threads(work)
+    assert m.counters["shared"] == N_THREADS * N_OPS
+    total = sum(m.counters[f"per.{k}"] for k in range(3))
+    assert total == N_THREADS * N_OPS * 2
+
+
+def test_histogram_hammer_loses_no_observations():
+    m = Metrics()
+
+    def work(i):
+        for j in range(N_OPS):
+            # fresh names force the creation race the old defaultdict
+            # pattern lost observations on
+            m.observe(f"h{(i * N_OPS + j) % 7}", float(j))
+            m.observe("shared_hist", 1.0)
+
+    _run_threads(work)
+    assert m.hists["shared_hist"].count == N_THREADS * N_OPS
+    spread = sum(m.hists[f"h{k}"].count for k in range(7))
+    assert spread == N_THREADS * N_OPS
+
+
+def test_snapshot_under_concurrent_writes_is_consistent():
+    m = Metrics()
+    stop = threading.Event()
+    snaps = []
+
+    def writer(i):
+        k = 0
+        while not stop.is_set() and k < N_OPS * 4:
+            m.inc("c")
+            m.observe(f"dyn.{k % 11}", k)
+            with m.timeit("timed"):
+                pass
+            k += 1
+
+    def reader():
+        while not stop.is_set():
+            snaps.append(m.snapshot())
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    r = threading.Thread(target=reader)
+    for t in threads:
+        t.start()
+    r.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    stop.set()
+    r.join(timeout=10.0)
+    assert snaps, "reader never snapshotted"
+    final = m.snapshot()
+    assert final["counters"]["c"] == 4 * N_OPS * 4
+    assert final["hists"]["timed"]["count"] == 4 * N_OPS * 4
+    # every interim snapshot was internally sane (no partial histograms)
+    for s in snaps:
+        for h in s["hists"].values():
+            assert h["count"] >= 0
+            if h["count"] > 0:
+                assert math.isfinite(h["mean"])
+
+
+def test_empty_histogram_snapshot_is_nan_not_crash():
+    h = Histogram()
+    s = h.snapshot()
+    assert s["count"] == 0
+    assert math.isnan(s["mean"]) and math.isnan(s["p99"])
+    assert math.isnan(h.percentile(50)) and math.isnan(h.mean)
