@@ -21,7 +21,11 @@ constants with values measured on this host by
 ``--live`` additionally replays the (thinned) trace through the REAL
 gateway stack (``repro.gateway``) and reports live-vs-sim rows —
 ``trace.live.gateway`` / ``trace.live.sim`` / ``trace.live.vs_sim``
-(see docs/benchmarks.md for the methodology).
+(see docs/benchmarks.md for the methodology); adding
+``--calibrate-from-live`` closes the gateway -> calibration -> sim
+round trip: the sim re-runs with costs measured from that very replay
+and ``trace.live.calibrated_sim`` / ``trace.live.roundtrip`` report
+whether it tracks live at least as tightly as the paper-constant sim.
 
   PYTHONPATH=src python benchmarks/bench_trace.py \\
       --trace-file benchmarks/data/azure_sample.csv \\
@@ -207,19 +211,28 @@ def synthetic_rows() -> list:
 
 def live_rows(trace_file: str = AZURE_SAMPLE, compress: float = 120.0,
               target_rps: float = 2.0, max_minutes: int = 10,
-              pool_size: int = 4, seed: int = 0) -> list:
+              pool_size: int = 4, seed: int = 0,
+              calibrate_from_live: bool = False,
+              calibration_out: str = None) -> list:
     """Live-vs-sim section: replay one thinned trace through the REAL
     gateway stack (``repro.gateway``) and the simulator, and report both
     plus their deltas — the wall-clock counterpart of every simulated
-    row above. The cold-start delta is the metric ``gateway/validate.py``
-    enforces in CI; here it is reported alongside the latency deltas
-    (live trace-time percentiles carry a compress-amplified startup
-    term, so they are context, not a gate)."""
+    row above. The cold-start and p99 deltas are the metrics
+    ``gateway/validate.py`` enforces in CI.
+
+    ``calibrate_from_live`` closes the round trip: the live replay's
+    CalibrationProbe payload becomes a ``hydra-calibration/v1`` overlay,
+    the sim re-runs with it, and a ``trace.live.calibrated_sim`` /
+    ``trace.live.roundtrip`` row pair reports whether the calibrated sim
+    tracks live at least as tightly as the uncalibrated one
+    (``calibration_out`` optionally persists the derived JSON for later
+    ``--calibration`` runs)."""
     from repro.gateway import load_trace, run_validation
 
     trace = load_trace(trace_file, target_rps=target_rps,
                        max_minutes=max_minutes, seed=seed)
-    report = run_validation(trace, compress=compress, pool_size=pool_size)
+    report = run_validation(trace, compress=compress, pool_size=pool_size,
+                            round_trip=calibrate_from_live)
     live, sim = report["live"], report["sim"]
     tol = report["tolerance"]
     rows = []
@@ -242,6 +255,45 @@ def live_rows(trace_file: str = AZURE_SAMPLE, compress: float = 120.0,
                     f"p99_delta_s={live['p99_s'] - sim['p99_s']:.3f};"
                     f"compress={compress:g}"),
     })
+    if calibrate_from_live and "round_trip" not in report:
+        # derivation failed (probe measured nothing): say so loudly and
+        # emit a non-finite roundtrip row so validate_rows turns the
+        # missing requested artifact into a non-zero exit, not a silent
+        # green run
+        msg = "; ".join(report.get("failures", [])) \
+            or "calibration unavailable"
+        print(f"# bench_trace: round trip unavailable: {msg}",
+              file=sys.stderr)
+        rows.append({
+            "name": "trace.live.roundtrip",
+            "us_per_call": float("nan"),
+            "derived": "calibrated_at_least_as_close=False",
+        })
+    elif calibrate_from_live:
+        cal = report["calibrated_sim"]
+        rt = report["round_trip"]
+        rows.append({
+            "name": "trace.live.calibrated_sim",
+            "us_per_call": cal["p99_s"] * 1e6,
+            "derived": (f"requests={cal['requests']};"
+                        f"cold_rt={cal['cold_runtime']};"
+                        f"pool_claims={cal['pool_claims']};"
+                        f"mean_mem_mb={cal['mean_mem_mb']:.0f};"
+                        f"dropped={cal['dropped']}"),
+        })
+        rows.append({
+            "name": "trace.live.roundtrip",
+            "us_per_call": 0.0,
+            "derived": (
+                f"cold_cal_delta={rt['cold_runtime']['cal_delta']};"
+                f"cold_uncal_delta={rt['cold_runtime']['uncal_delta']};"
+                f"p99_cal_delta_s={rt['p99_s']['cal_delta']:.3f};"
+                f"p99_uncal_delta_s={rt['p99_s']['uncal_delta']:.3f};"
+                f"calibrated_at_least_as_close={rt['passed']}"),
+        })
+        if calibration_out and "calibration" in report:
+            from repro.core.calibrate import write_calibration_doc
+            write_calibration_doc(calibration_out, report["calibration"])
     return rows
 
 
@@ -320,7 +372,25 @@ def main(argv=None) -> int:
                          "deltas (see repro.gateway)")
     ap.add_argument("--live-compress", type=float, default=120.0,
                     help="wall-clock compression for the --live replay")
+    ap.add_argument("--calibrate-from-live", action="store_true",
+                    help="with --live: derive a calibration from the "
+                         "live replay itself, re-simulate with it, and "
+                         "report trace.live.calibrated_sim / "
+                         "trace.live.roundtrip rows (the gateway -> "
+                         "calibration -> sim loop)")
+    ap.add_argument("--calibration-out", default=None, metavar="PATH",
+                    help="with --calibrate-from-live: also write the "
+                         "derived hydra-calibration/v1 JSON here")
     args = ap.parse_args(argv)
+
+    if args.calibrate_from_live and not args.live:
+        print("bench_trace: --calibrate-from-live requires --live",
+              file=sys.stderr)
+        return 2
+    if args.calibration_out and not args.calibrate_from_live:
+        print("bench_trace: --calibration-out requires "
+              "--calibrate-from-live", file=sys.stderr)
+        return 2
 
     if not os.path.isfile(args.trace_file):
         print(f"bench_trace: trace file not found: {args.trace_file}",
@@ -343,7 +413,9 @@ def main(argv=None) -> int:
         rows += live_rows(args.trace_file, compress=args.live_compress,
                           target_rps=args.target_rps or 2.0,
                           max_minutes=args.max_minutes or 10,
-                          seed=args.seed)
+                          seed=args.seed,
+                          calibrate_from_live=args.calibrate_from_live,
+                          calibration_out=args.calibration_out)
 
     print("name,us_per_call,derived")
     for row in rows:

@@ -8,7 +8,11 @@ request through ``repro.gateway`` — per-tenant bounded queues, a real
 ``HydraPlatform`` with a pre-warmed pool, real placement, real arena
 allocation, real compiled executables — replayed open-loop at a
 wall-clock compression factor. The run finishes with the live-vs-sim
-delta table from ``repro.gateway.validate``.
+delta table from ``repro.gateway.validate``, run in **round-trip**
+mode: the replay's own CalibrationProbe measurements are folded back
+into ``SimParams`` and the calibrated simulator must track the live run
+at least as tightly as the paper-constant one — the gateway ->
+calibration -> sim loop, closed on one trace.
 
   PYTHONPATH=src python examples/gateway_replay.py [azure_trace.csv]
 """
@@ -38,7 +42,8 @@ def main():
           f"{d['tenants']} tenants over {d['duration_s']:.0f}s "
           f"(~{d['duration_s'] / COMPRESS:.1f}s wall at {COMPRESS:g}x)\n")
 
-    report = run_validation(trace, compress=COMPRESS, pool_size=4)
+    report = run_validation(trace, compress=COMPRESS, pool_size=4,
+                            round_trip=True)
     live = report["live"]
     print(f"live gateway: {live['requests']} served, "
           f"{live['cold_runtime']} cold starts, "
@@ -46,6 +51,11 @@ def main():
           f"p50={live['p50_s']:.2f}s p99={live['p99_s']:.2f}s "
           f"(trace time; startup is compress-amplified)\n")
     print(format_report(report))
+    calibration = report.get("calibration")
+    if calibration:
+        measured = calibration["measured"]
+        print(f"\nderived calibration ({len(measured)} fields): "
+              + ", ".join(sorted(measured)))
     if not report["ok"]:
         sys.exit(1)
 

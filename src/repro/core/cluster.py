@@ -372,7 +372,13 @@ class HydraCluster:
     def rebalance(self, *, max_moves: int = 8) -> list:
         """Drain the most-committed node into the least-committed one by
         migrating its smallest functions until the spread drops below one
-        function's footprint. Returns [(fid, src, dst), ...]."""
+        function's footprint. Returns [(fid, src, dst), ...].
+
+        Runs mid-burst under the gateway's ``ClusterBalancer``, so the
+        call and its moves are counted in cluster metrics
+        (``rebalance.calls``/``rebalance.moves``) for the live-vs-sim
+        migration accounting."""
+        self.metrics.inc("rebalance.calls")
         moves = []
         for _ in range(max_moves):
             with self._lock:
@@ -388,6 +394,8 @@ class HydraCluster:
                 break
             self.migrate(rec.fid, lo.idx, eager=False)
             moves.append((rec.fid, hi.idx, lo.idx))
+        if moves:
+            self.metrics.inc("rebalance.moves", len(moves))
         return moves
 
     # ------------------------------------------------------------------

@@ -49,6 +49,23 @@ class Histogram:
         vals = self._copy()
         return float(np.mean(vals)) if vals else float("nan")
 
+    @property
+    def sum(self) -> float:
+        """Total of all observations (0.0 when empty)."""
+        vals = self._copy()
+        return float(np.sum(vals)) if vals else 0.0
+
+    def count_sum(self) -> tuple:
+        """One consistent ``(count, sum)`` pair under a single lock
+        hold. This is the window-edge primitive: snapshotting the pair
+        at two points in time yields the exact mean of the observations
+        between them even while writers keep appending — the gateway's
+        CalibrationProbe measures replay-window startup costs this way
+        (reading ``count`` and ``sum`` as two separate calls could
+        straddle a concurrent observe and tear the pair)."""
+        with self._lock:
+            return len(self._vals), float(sum(self._vals))
+
     def snapshot(self) -> dict:
         # one consistent copy: count/mean/percentiles all describe the
         # same set of observations even while writers keep appending

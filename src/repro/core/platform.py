@@ -52,6 +52,7 @@ import dataclasses
 import json
 import os
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -182,6 +183,7 @@ class HydraPlatform:
         """Pop a pre-warmed runtime; cold-boot only when the pool is dry.
         The replacement boot happens on a background thread — the claiming
         request never waits on it."""
+        t0 = time.perf_counter()
         with self._lock:
             rt = self._pool.pop() if self._pool else None
             if rt is None:
@@ -197,6 +199,10 @@ class HydraPlatform:
             self.metrics.inc("pool.claim")
             with self._lock:
                 self._active.append(rt)
+            # the whole warm handover — lock wait, pop, activation — so a
+            # live replay can calibrate the simulator's pool_claim_s from
+            # measured claims (core/calibrate)
+            self.metrics.observe("pool_claim_s", time.perf_counter() - t0)
         else:
             self.metrics.inc("pool.miss")
             booted = None

@@ -19,31 +19,42 @@ Pieces (one module each):
     per-tenant queues, token-bucket admission, SLO timeouts, worker
     threads; plus the platform ``Autoscaler``
     (``ArrivalRateEstimator`` -> ``AdaptivePoolPolicy`` ->
-    ``resize_pool``);
+    ``resize_pool``) and the cluster ``ClusterBalancer`` (per-node
+    commit spread + queue depth -> ``HydraCluster.rebalance()``
+    mid-burst);
   * ``loadgen``  — open-loop arrival scheduling on the wall clock;
-  * ``recorder`` — live metrics -> ``SimResult``;
+  * ``recorder`` — live metrics -> ``SimResult``; the
+    ``CalibrationProbe`` measures replay-window startup/warm/restore
+    costs and RSS for the calibration round trip;
   * ``replay``   — ``replay_trace(trace, target, cfg)`` orchestration;
   * ``validate`` — sim-vs-real delta report + the enforced cold-start
-    tolerance gate (CI ``gateway-smoke``).
+    and p99 tolerance gates (CI ``gateway-smoke``), and the
+    ``--round-trip`` mode that calibrates the sim from the live run
+    itself and requires it to track live at least as tightly as the
+    uncalibrated sim (CI ``roundtrip-smoke``).
 
 Entry points: ``python -m repro.launch.serve --gateway --trace-file ...
 --compress 60`` for a live replay, ``python -m repro.gateway.validate``
-for the sim-vs-real diff.
+for the sim-vs-real diff (``--round-trip`` for the calibration loop).
 """
-from repro.gateway.gateway import Autoscaler, Gateway, GatewayParams
+from repro.gateway.gateway import (Autoscaler, ClusterBalancer, Gateway,
+                                   GatewayParams)
 from repro.gateway.loadgen import LoadGenerator, LoadResult
-from repro.gateway.recorder import Recorder
+from repro.gateway.recorder import CalibrationProbe, Recorder
 from repro.gateway.replay import ReplayConfig, replay_trace
 from repro.gateway.targets import (ClusterTarget, PlatformTarget,
                                    RuntimeTarget, TargetAdapter, wrap_target)
 from repro.gateway.validate import (format_report, load_trace,
-                                    run_validation, sim_params_for_live)
+                                    round_trip_check, run_validation,
+                                    sim_params_for_live)
 from repro.gateway.workload import TraceWorkload, scaled_runtime_budget
 
 __all__ = [
-    "Gateway", "GatewayParams", "Autoscaler", "LoadGenerator", "LoadResult",
-    "Recorder", "ReplayConfig", "replay_trace", "TargetAdapter",
+    "Gateway", "GatewayParams", "Autoscaler", "ClusterBalancer",
+    "LoadGenerator", "LoadResult", "Recorder", "CalibrationProbe",
+    "ReplayConfig", "replay_trace", "TargetAdapter",
     "RuntimeTarget", "PlatformTarget", "ClusterTarget", "wrap_target",
     "TraceWorkload", "scaled_runtime_budget", "run_validation",
-    "format_report", "sim_params_for_live", "load_trace",
+    "round_trip_check", "format_report", "sim_params_for_live",
+    "load_trace",
 ]

@@ -39,7 +39,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.cluster import AdaptivePoolPolicy, ArrivalRateEstimator
-from repro.core.errors import HydraOOMError
+from repro.core.errors import FunctionNotRegisteredError, HydraOOMError
 from repro.core.scheduler import TokenBucket
 
 
@@ -170,10 +170,15 @@ class Gateway:
         inv = req.inv
         try:
             self.adapter.invoke(req.name, self.workload.args_for(inv))
-        except HydraOOMError as e:
-            # the fleet is momentarily full (arena budgets saturated by
-            # the burst): back off and requeue, like the sim engine's
-            # retry path, until max_wait/SLO expires
+        except (HydraOOMError, FunctionNotRegisteredError) as e:
+            # HydraOOM: the fleet is momentarily full (arena budgets
+            # saturated by the burst) — back off and requeue, like the
+            # sim engine's retry path, until max_wait/SLO expires.
+            # FunctionNotRegistered can only be transient here (submit
+            # filters unknown fids): the balancer is migrating the
+            # function between nodes and the request raced the
+            # export->import window — requeue it the same way instead
+            # of failing a known function mid-migration.
             if waited_trace > p.max_wait_s:
                 self.recorder.drop("gave_up")
                 return
@@ -271,6 +276,97 @@ class Autoscaler:
     def start(self) -> None:
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="gateway-autoscaler")
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self.tick()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+class ClusterBalancer:
+    """Burst-time rebalancing for a ``HydraCluster`` target — the cluster
+    analog of the platform ``Autoscaler``.
+
+    The cluster already sizes its per-node pools adaptively (EWMA
+    estimators inside ``HydraCluster.invoke``), but nothing moves
+    *functions* while a replay is running: a tenant-skewed trace packs
+    one node solid (colocation) and every burst lands there while the
+    other nodes idle. This thread closes that gap: every ``interval_s``
+    it reads per-node **committed memory** (placement-estimate bytes, the
+    same accounting ``HydraCluster._pick_node`` packs by) and the
+    gateway's **queue depth** (the live burst signal), and when the
+    commit spread exceeds ``imbalance`` of the per-node budget while
+    requests are actually queueing, it triggers
+    ``HydraCluster.rebalance()`` — snapshot-migrating the hot node's
+    smallest functions onto the coldest node mid-burst.
+
+    Migration needs the snapshot path, so the balancer only arms itself
+    when the cluster has a ``snapshot_dir`` (``armed`` reports which).
+    Move counts and transfer seconds are read back by the replay
+    orchestrator into ``SimResult`` extras, so a live cluster replay and
+    the ``hydra-cluster`` sim model diff on migration accounting too.
+    """
+
+    def __init__(self, cluster, gateway: Optional[Gateway] = None, *,
+                 interval_s: float = 0.25, imbalance: float = 0.25,
+                 min_queue: int = 1, max_moves: int = 4):
+        self.cluster = cluster
+        self.gateway = gateway
+        self.interval_s = interval_s
+        self.imbalance = imbalance
+        self.min_queue = min_queue
+        self.max_moves = max_moves
+        self.armed = bool(cluster.params.snapshot_dir)
+        self.ticks = 0
+        self.rebalances = 0            # rebalance() calls that moved >= 1 fn
+        self.moves = 0                 # functions migrated
+        self.errors = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _spread(self) -> int:
+        committed = [n.committed for n in self.cluster.nodes]
+        return max(committed) - min(committed) if committed else 0
+
+    def should_rebalance(self) -> bool:
+        if not self.armed:
+            return False
+        if self._spread() <= self.imbalance \
+                * self.cluster.params.node_memory_bytes:
+            return False
+        # only act while the burst is live: an imbalanced-but-idle fleet
+        # is a placement-time concern, not worth paying transfer cost for
+        if self.gateway is not None \
+                and self.gateway.depth() < self.min_queue:
+            return False
+        return True
+
+    def tick(self) -> int:
+        """One balancing decision; returns functions moved this tick."""
+        self.ticks += 1
+        if not self.should_rebalance():
+            return 0
+        try:
+            moved = len(self.cluster.rebalance(max_moves=self.max_moves))
+        except Exception:
+            # a racing eviction/shutdown must not kill the balancer for
+            # the rest of the replay
+            self.errors += 1
+            return 0
+        if moved:
+            self.rebalances += 1
+            self.moves += moved
+        return moved
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="gateway-balancer")
         self._thread.start()
 
     def _loop(self) -> None:

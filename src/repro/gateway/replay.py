@@ -1,9 +1,15 @@
 """One-call orchestration: trace + live stack -> SimResult.
 
 ``replay_trace`` wires the pieces — target adapter, trace workload,
-recorder (sampler thread), gateway workers, optional platform
-autoscaler, open-loop load generator — runs the replay, drains, and
-returns ``(SimResult, extras)``.
+recorder (sampler thread + calibration probe), gateway workers,
+optional platform autoscaler or cluster balancer, open-loop load
+generator — runs the replay, drains, and returns ``(SimResult,
+extras)``. ``extras["probe"]`` carries the ``CalibrationProbe`` payload
+that ``core.calibrate.calibration_from_replay`` turns into a
+``SimParams`` overlay (the gateway -> calibration -> sim round trip);
+cluster replays additionally report mid-burst migration accounting
+(``migrations``/``transfer_s``/``transfer_bytes``) for the live-vs-sim
+diff.
 
 The caller owns the target's lifecycle: build the
 runtime/platform/cluster, replay, then ``target.shutdown()``. That
@@ -16,9 +22,10 @@ import time
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.gateway.gateway import Autoscaler, Gateway, GatewayParams
+from repro.gateway.gateway import (Autoscaler, ClusterBalancer, Gateway,
+                                   GatewayParams)
 from repro.gateway.loadgen import LoadGenerator
-from repro.gateway.recorder import Recorder
+from repro.gateway.recorder import CalibrationProbe, Recorder
 from repro.gateway.targets import DEFAULT_RUNTIME_BASE, wrap_target
 from repro.gateway.workload import TraceWorkload
 
@@ -39,6 +46,14 @@ class ReplayConfig:
     cover_s: float = 1.0               # wall seconds one warm pool absorbs
     runtime_base_bytes: int = DEFAULT_RUNTIME_BASE
     drain_timeout_s: float = 120.0     # wall seconds
+    probe: bool = True                 # record the calibration payload
+    warm_executables: bool = True      # AOT-compile before the clock starts
+    # cluster targets only: burst-time migration/rebalance in the loop
+    balance: bool = True
+    balance_interval_s: float = 0.25   # wall seconds between balance ticks
+    balance_imbalance: float = 0.25    # commit spread / node budget trigger
+    balance_min_queue: int = 1         # queued requests = live-burst signal
+    balance_max_moves: int = 4         # migrations per rebalance() call
 
 
 def _budget_of(adapter) -> Optional[int]:
@@ -66,6 +81,47 @@ def build_workload(adapter, cfg: ReplayConfig) -> TraceWorkload:
     return wl
 
 
+def warm_executables(adapter, workload, trace) -> int:
+    """AOT-compile the workload's shared executable into the target's
+    executable cache(s) before the replay clock starts.
+
+    The paper's platform compiles at deploy time (Native Image analog),
+    and the sim's ``fn_register_s`` models a code *install* from the
+    shared cache — so the one-time XLA compile of the emulated program
+    must not land on the first request of the measured window, where it
+    would masquerade as seconds of trace-time cold start and poison both
+    the latency gates and the derived calibration. A scratch runtime
+    sharing each cache registers one representative spec through the
+    real path (same cache key), then shuts down; its budget is sized
+    from the spec's own registration reserve so a big-arena workload
+    cannot OOM the warm-up. Warming is best-effort — a failure means
+    the first request pays the compile (pre-warm behaviour), never an
+    aborted replay. Returns the number of caches warmed."""
+    from repro.core.runtime import HydraRuntime, registration_budget
+
+    inv = next(iter(trace), None)
+    if inv is None:
+        return 0
+    spec = workload.spec_for(inv.fid, inv.mem_bytes)
+    budget = max(64 * (1 << 20), 2 * registration_budget(spec)[0])
+    warmed = 0
+    for cache in adapter.exe_caches():
+        if cache is None:
+            continue
+        try:
+            rt = HydraRuntime(memory_budget_bytes=budget,
+                              executable_cache=cache, n_workers=1,
+                              janitor=False)
+            try:
+                rt.register_function("__warm__", spec, tenant="__warm__")
+            finally:
+                rt.shutdown()
+            warmed += 1
+        except Exception:
+            continue
+    return warmed
+
+
 def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
     """Replay ``trace`` open-loop against ``target`` (a ``HydraRuntime``,
     ``HydraPlatform``, or ``HydraCluster``). Returns ``(SimResult,
@@ -76,10 +132,14 @@ def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
     adapter = wrap_target(target, cfg.runtime_base_bytes)
     workload = build_workload(adapter, cfg)
     n_registered = workload.register_all(trace, adapter)
+    if cfg.warm_executables:
+        warm_executables(adapter, workload, trace)
 
+    probe = CalibrationProbe(adapter, compress=cfg.compress) \
+        if cfg.probe else None
     recorder = Recorder(adapter, compress=cfg.compress,
-                        sample_dt_s=cfg.sample_dt_s)
-    autoscaler = None
+                        sample_dt_s=cfg.sample_dt_s, probe=probe)
+    autoscaler = balancer = None
     if cfg.autoscale and adapter.kind == "platform":
         autoscaler = Autoscaler(target, pool_min=cfg.pool_min,
                                 pool_max=cfg.pool_max, cover_s=cfg.cover_s)
@@ -91,12 +151,20 @@ def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
                                tenant_burst=cfg.tenant_burst,
                                compress=cfg.compress),
                  recorder, autoscaler=autoscaler)
+    if cfg.balance and adapter.kind == "cluster":
+        balancer = ClusterBalancer(target, gw,
+                                   interval_s=cfg.balance_interval_s,
+                                   imbalance=cfg.balance_imbalance,
+                                   min_queue=cfg.balance_min_queue,
+                                   max_moves=cfg.balance_max_moves)
 
     t0 = time.monotonic()
     recorder.start(t0)
     gw.start()
     if autoscaler is not None:
         autoscaler.start()
+    if balancer is not None:
+        balancer.start()
     try:
         load = LoadGenerator(trace, gw, cfg.compress).run(t0)
         drained = gw.drain(timeout_s=cfg.drain_timeout_s)
@@ -104,10 +172,11 @@ def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
         gw.stop()
         if autoscaler is not None:
             autoscaler.stop()
+        if balancer is not None:
+            balancer.stop()
         recorder.stop()
 
-    n_nodes = len(target.nodes) if adapter.kind == "cluster" else 1
-    res = recorder.finish(n_nodes=n_nodes)
+    res = recorder.finish()        # n_nodes from the adapter's real count
     extras = {
         **recorder.extras(),
         "registered": n_registered,
@@ -119,4 +188,20 @@ def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
         "drained": drained,
         "autoscaler_resizes": autoscaler.resizes if autoscaler else 0,
     }
+    if probe is not None:
+        extras["probe"] = probe.finish()
+    if adapter.kind == "cluster":
+        # mid-burst migration accounting, diffable against the sim's
+        # hydra-cluster transfer modelling (SimResult.transfers)
+        cm = target.metrics
+        extras["balancer"] = {
+            "armed": balancer.armed if balancer else False,
+            "ticks": balancer.ticks if balancer else 0,
+            "rebalances": balancer.rebalances if balancer else 0,
+            "moves": balancer.moves if balancer else 0,
+            "errors": balancer.errors if balancer else 0,
+            "migrations": cm.counters.get("migrations", 0),
+            "transfer_s": cm.hist("transfer_s").sum,
+            "transfer_bytes": cm.counters.get("transfer_bytes", 0),
+        }
     return res, extras

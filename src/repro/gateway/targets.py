@@ -53,8 +53,44 @@ class TargetAdapter:
     def _runtimes(self) -> list:
         return []
 
+    @property
+    def n_nodes(self) -> int:
+        """Real machine count of the adapted stack. ``Recorder.finish``
+        stamps this on the live ``SimResult`` so fleet-wide metrics are
+        never read as single-node by accident (a cluster replay reported
+        as one node would look N-fold denser than the sim's fleet-wide
+        accounting)."""
+        return 1
+
+    def node_mem(self) -> list:
+        """Per-node committed bytes: the ``node_mem_bytes`` series of
+        one fresh ``sample()`` (callers already holding a sample should
+        read the key directly, as the CalibrationProbe does)."""
+        return self.sample()["node_mem_bytes"]
+
+    def platform_metrics(self) -> list:
+        """Platform-level ``Metrics`` objects (boot/claim/restore
+        timings live here), one per node; empty for a raw runtime."""
+        return []
+
+    def exe_caches(self) -> list:
+        """Every distinct ``ExecutableCache`` the stack compiles into
+        (one fleet-shared cache normally; per-node caches when a
+        cluster opted out of sharing). The replay warms the workload's
+        shared executable through these before the clock starts: the
+        paper's platform AOT-compiles at deploy time, so a first-request
+        XLA compile would be measurement noise, not a modeled cost."""
+        return [self.target.exe_cache]
+
+    def runtime_metrics(self) -> list:
+        """Per-runtime ``Metrics`` objects (code-install timings)."""
+        return [rt.metrics for rt in self._runtimes()]
+
     def sample(self) -> dict:
-        """Point-in-time fleet sample: mem/pool bytes + runtime count."""
+        """Point-in-time fleet sample: mem/pool bytes + runtime count,
+        plus the per-node ``node_mem_bytes`` series (one stats pass
+        covers both — the recorder grid and the CalibrationProbe share
+        a single sample per tick)."""
         raise NotImplementedError
 
     def counters(self) -> dict:
@@ -87,8 +123,9 @@ class RuntimeTarget(TargetAdapter):
 
     def sample(self) -> dict:
         rt: HydraRuntime = self.target
-        return {"mem_bytes": rt.budget.used + self.runtime_base,
-                "pool_bytes": 0, "runtimes": 1}
+        mem = rt.budget.used + self.runtime_base
+        return {"mem_bytes": mem, "pool_bytes": 0, "runtimes": 1,
+                "node_mem_bytes": [mem]}
 
     def counters(self) -> dict:
         cold_iso, warm_iso = self._isolate_counts()
@@ -107,13 +144,17 @@ class PlatformTarget(TargetAdapter):
     def _runtimes(self) -> list:
         return self.target.runtimes()
 
+    def platform_metrics(self) -> list:
+        return [self.target.metrics]
+
     def sample(self) -> dict:
         plat: HydraPlatform = self.target
         s = plat.stats()
         total = s["runtimes_active"] + s["runtimes_pooled"]
-        return {"mem_bytes": s["budget_used"] + total * self.runtime_base,
+        mem = s["budget_used"] + total * self.runtime_base
+        return {"mem_bytes": mem,
                 "pool_bytes": s["runtimes_pooled"] * self.runtime_base,
-                "runtimes": total}
+                "runtimes": total, "node_mem_bytes": [mem]}
 
     def counters(self) -> dict:
         c = self.target.metrics.counters
@@ -138,15 +179,29 @@ class ClusterTarget(TargetAdapter):
     def _runtimes(self) -> list:
         return [rt for p in self._platforms() for rt in p.runtimes()]
 
+    @property
+    def n_nodes(self) -> int:
+        return len(self.target.nodes)
+
+    def platform_metrics(self) -> list:
+        return [p.metrics for p in self._platforms()]
+
+    def exe_caches(self) -> list:
+        if self.target.exe_cache is not None:     # fleet-shared cache
+            return [self.target.exe_cache]
+        return [p.exe_cache for p in self._platforms()]
+
     def sample(self) -> dict:
-        mem = pool = runtimes = 0
+        per_node = []
+        pool = runtimes = 0
         for p in self._platforms():
             s = p.stats()
             total = s["runtimes_active"] + s["runtimes_pooled"]
-            mem += s["budget_used"] + total * self.runtime_base
+            per_node.append(s["budget_used"] + total * self.runtime_base)
             pool += s["runtimes_pooled"] * self.runtime_base
             runtimes += total
-        return {"mem_bytes": mem, "pool_bytes": pool, "runtimes": runtimes}
+        return {"mem_bytes": sum(per_node), "pool_bytes": pool,
+                "runtimes": runtimes, "node_mem_bytes": per_node}
 
     def counters(self) -> dict:
         cold = claims = evicted = 0

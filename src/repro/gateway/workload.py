@@ -28,6 +28,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.registry import CallableSpec
 
@@ -99,7 +100,12 @@ class TraceWorkload:
         return n
 
     def args_for(self, inv) -> dict:
-        return {"x": jnp.full((VEC,), float(inv.fid % 11), jnp.float32)}
+        # host-side payload, like a real request body arriving over the
+        # wire: the compiled executable device_puts it on call. An eager
+        # jnp.full here would dispatch a traced op per request (~0.3 ms
+        # of pure overhead, GIL-serialized across gateway workers) and
+        # throttle high-compression replays far below the open-loop rate
+        return {"x": np.full((VEC,), float(inv.fid % 11), np.float32)}
 
     def name_for(self, inv):
         entry = self.registered.get(inv.fid)

@@ -110,7 +110,9 @@ def main(argv=None):
                     help="after serving, write measured costs (runtime "
                          "boot, register, restore) as a "
                          "hydra-calibration/v1 JSON for the trace "
-                         "simulator (see bench_trace --calibration)")
+                         "simulator (see bench_trace --calibration); in "
+                         "gateway mode the costs come from the replay's "
+                         "CalibrationProbe")
     # ---- gateway mode: open-loop wall-clock trace replay ----
     ap.add_argument("--gateway", action="store_true",
                     help="replay a trace open-loop in wall-clock time "
@@ -143,6 +145,15 @@ def main(argv=None):
     ap.add_argument("--tenant-rate", type=float, default=None,
                     help="per-tenant token-bucket rate in trace req/s "
                          "(gateway mode)")
+    ap.add_argument("--round-trip", action="store_true",
+                    help="gateway mode: close the gateway -> calibration "
+                         "-> sim loop — replay live, derive a "
+                         "calibration from that run, re-simulate with "
+                         "it, and report whether the calibrated sim "
+                         "tracks live at least as tightly as the "
+                         "uncalibrated sim (repro.gateway.validate; "
+                         "always validates the single-node platform "
+                         "stack, so --nodes is ignored)")
     args = ap.parse_args(argv)
 
     if args.gateway:
@@ -247,7 +258,9 @@ def main(argv=None):
 def run_gateway(args) -> dict:
     """Open-loop wall-clock trace replay through ``repro.gateway``
     against the stack selected by --nodes/--pool. Prints the live
-    result in the simulator's SimResult summary schema and returns it."""
+    result in the simulator's SimResult summary schema and returns it.
+    ``--round-trip`` instead runs the full gateway -> calibration -> sim
+    validation loop and prints its delta report."""
     import json
 
     from repro.core.sim import SimParams
@@ -261,6 +274,24 @@ def run_gateway(args) -> dict:
           f"{d['duration_s']:.0f}s trace time "
           f"(~{d['duration_s'] / args.compress:.1f}s wall at "
           f"{args.compress:g}x)")
+
+    if args.round_trip:
+        from repro.gateway import format_report, run_validation
+        report = run_validation(trace, compress=args.compress,
+                                pool_size=max(args.pool, 1),
+                                mem_scale=args.mem_scale,
+                                n_workers=args.gw_workers,
+                                round_trip=True)
+        print(format_report(report))
+        if args.calibration and "calibration" in report:
+            from repro.core.calibrate import write_calibration_doc
+            write_calibration_doc(args.calibration, report["calibration"])
+            print(f"[gateway] wrote calibration {args.calibration}")
+        if not report["ok"]:
+            # same contract as repro.gateway.validate: a failed gate is
+            # a non-zero exit, not a printed FAIL line with exit 0
+            raise SystemExit(1)
+        return report
 
     # trace-time TTL semantics must follow the replay clock: the sim's
     # isolate keep-alive, however fast the trace replays (same mapping
@@ -287,8 +318,26 @@ def run_gateway(args) -> dict:
     print(f"[gateway] drops: {extras['drops']} retries: "
           f"{extras['retries']} autoscaler resizes: "
           f"{extras['autoscaler_resizes']}")
+    if "balancer" in extras:
+        b = extras["balancer"]
+        print(f"[gateway] balancer: armed={b['armed']} "
+              f"rebalances={b['rebalances']} moves={b['moves']} "
+              f"migrations={b['migrations']} "
+              f"transfer={b['transfer_bytes'] / 2**20:.1f}MB/"
+              f"{b['transfer_s']:.3f}s")
     if extras["errors"]:
         print(f"[gateway] errors (sample): {extras['errors'][:3]}")
+    if args.calibration:
+        from repro.core.calibrate import (calibration_from_replay,
+                                          write_calibration_doc)
+        try:
+            write_calibration_doc(args.calibration,
+                                  calibration_from_replay(res, extras))
+            print(f"[gateway] wrote calibration {args.calibration}")
+        except ValueError as e:
+            # nothing measurable this replay (e.g. every request dropped
+            # at the door): report it, don't crash the summary output
+            print(f"[gateway] no calibration written: {e}")
     print(json.dumps(summary, indent=1, sort_keys=True, default=str))
     return summary
 
