@@ -32,7 +32,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 import jax.numpy as jnp
 
 from benchmarks.functions import catalog
-from repro.core import ExecutableCache, HydraPlatform, HydraRuntime
+from repro.core import HydraPlatform, HydraRuntime
 from repro.core.arena import ArenaPool
 
 MB = 1 << 20
@@ -91,7 +91,7 @@ def measure() -> tuple:
     cold_a = time.perf_counter() - t0
     pool.release(a)
     t0 = time.perf_counter()
-    b = pool.acquire(("kv",), factory)           # pool hit: warm
+    pool.acquire(("kv",), factory)               # pool hit: warm
     warm_a = time.perf_counter() - t0
     pool.release(warmup)
     rows.append({"name": "startup.arena_cold", "us_per_call": cold_a * 1e6,

@@ -370,8 +370,9 @@ def main(argv=None) -> int:
                     help="also replay the (thinned) trace through the "
                          "REAL gateway stack and report live-vs-sim "
                          "deltas (see repro.gateway)")
-    ap.add_argument("--live-compress", type=float, default=120.0,
-                    help="wall-clock compression for the --live replay")
+    ap.add_argument("--live-compress", type=float, default=None,
+                    help="wall-clock compression for the --live replay "
+                         "(default 120)")
     ap.add_argument("--calibrate-from-live", action="store_true",
                     help="with --live: derive a calibration from the "
                          "live replay itself, re-simulate with it, and "
@@ -385,6 +386,10 @@ def main(argv=None) -> int:
 
     if args.calibrate_from_live and not args.live:
         print("bench_trace: --calibrate-from-live requires --live",
+              file=sys.stderr)
+        return 2
+    if args.live_compress is not None and not args.live:
+        print("bench_trace: --live-compress requires --live",
               file=sys.stderr)
         return 2
     if args.calibration_out and not args.calibrate_from_live:
@@ -410,7 +415,8 @@ def main(argv=None) -> int:
     if args.synthetic:
         rows += synthetic_rows()
     if args.live:
-        rows += live_rows(args.trace_file, compress=args.live_compress,
+        rows += live_rows(args.trace_file,
+                          compress=args.live_compress or 120.0,
                           target_rps=args.target_rps or 2.0,
                           max_minutes=args.max_minutes or 10,
                           seed=args.seed,

@@ -16,7 +16,6 @@ OUT = "experiments/hillclimb"
 
 
 def run(cell: str, iteration: int):
-    import jax
     from repro.launch.dryrun import run_cell
     from repro.launch.mesh import make_production_mesh
     from repro.launch.sharding import default_rules
@@ -137,8 +136,10 @@ def run(cell: str, iteration: int):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True)
-    ap.add_argument("--it", type=int, required=True)
+    ap.add_argument("--cell", required=True,
+                    help="hillclimb cell name (arch/mesh pair) to run")
+    ap.add_argument("--it", type=int, required=True,
+                    help="iteration index within the cell's schedule")
     args = ap.parse_args()
     rec = run(args.cell, args.it)
     r = rec["roofline"]

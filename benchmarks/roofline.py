@@ -2,4 +2,6 @@
 
 See src/repro/launch/roofline.py for the implementation and formulas.
 """
-from repro.launch.roofline import (Roofline, analyze, collective_bytes)  # noqa: F401
+from repro.launch.roofline import Roofline, analyze, collective_bytes
+
+__all__ = ["Roofline", "analyze", "collective_bytes"]

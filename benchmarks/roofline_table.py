@@ -46,8 +46,10 @@ def render(rows: list) -> str:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default="16x16")
-    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh", default="16x16",
+                    help="mesh shape whose dryrun cells to tabulate")
+    ap.add_argument("--tag", default="",
+                    help="optional result-set tag suffix to load")
     args = ap.parse_args()
     rows = load(args.mesh, args.tag)
     print(f"### Roofline table — mesh {args.mesh} ({len(rows)} cells)\n")

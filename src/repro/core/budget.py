@@ -24,15 +24,18 @@ class MemoryBudget:
 
     @property
     def used(self) -> int:
-        return self._used
+        with self._lock:                   # HL001: paired with reserve()
+            return self._used
 
     @property
     def peak(self) -> int:
-        return self._peak
+        with self._lock:
+            return self._peak
 
     @property
     def free(self) -> int:
-        return self.capacity - self._used
+        with self._lock:
+            return self.capacity - self._used
 
     def reserve(self, nbytes: int, *, admission: bool = False) -> None:
         nbytes = int(nbytes)

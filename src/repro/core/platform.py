@@ -598,11 +598,12 @@ class HydraPlatform:
             n_pool = len(self._pool)
             n_funcs = sum(r.runtime is not None for r in
                           self._records.values())
+            n_known = len(self._records)   # HL001: _records mutates under lock
         return {
             "runtimes_active": len(active),
             "runtimes_pooled": n_pool,
             "functions_placed": n_funcs,
-            "functions_known": len(self._records),
+            "functions_known": n_known,
             "budget_used": sum(rt.budget.used for rt in active),
             "exe_cache": self.exe_cache.stats(),
             "metrics": self.metrics.snapshot(),

@@ -88,4 +88,5 @@ class FunctionRegistry:
             return list(self._funcs)
 
     def __len__(self) -> int:
-        return len(self._funcs)
+        with self._lock:                   # HL001: paired with register()
+            return len(self._funcs)

@@ -8,9 +8,7 @@ import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 

@@ -21,14 +21,14 @@ from __future__ import annotations
 
 from dataclasses import replace
 
-from repro.core.sim.engine import (GB, MB, Engine, Invocation, Node,
-                                   RuntimeInst, SimParams, SimResult)
+from repro.core.sim.engine import (GB, MB, Engine, Node, RuntimeInst,
+                                   SimParams, SimResult)
 from repro.core.sim.models import (MODELS, HydraClusterModel, HydraModel,
                                    HydraPoolModel, OpenWhiskModel,
                                    PhotonsModel, PlatformModel,
                                    register_model)
-from repro.core.traces import (Trace, discover_azure_tables, gen_trace,
-                               load_azure_trace)
+from repro.core.traces import (Invocation, Trace, discover_azure_tables,
+                               gen_trace, load_azure_trace)
 
 __all__ = [
     "MB", "GB", "SimParams", "SimResult", "Invocation", "Engine", "Node",

@@ -23,8 +23,6 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.traces import Invocation  # noqa: F401  (re-exported)
-
 MB = 1 << 20
 GB = 1 << 30
 

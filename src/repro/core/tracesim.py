@@ -14,9 +14,24 @@ comparison on the default synthetic trace.
 """
 from __future__ import annotations
 
-from repro.core.sim import *                  # noqa: F401,F403
-from repro.core.sim import Node, RuntimeInst, compare, gen_trace
-from repro.core.sim import __all__ as __all__  # single source of truth
+from repro.core import sim as _sim
+from repro.core.sim import (GB, MB, MODELS, Engine, HydraClusterModel,
+                            HydraModel, HydraPoolModel, Invocation, Node,
+                            OpenWhiskModel, PhotonsModel, PlatformModel,
+                            RuntimeInst, SimParams, SimResult, Trace,
+                            compare, discover_azure_tables, gen_trace,
+                            load_azure_trace, register_model, simulate,
+                            simulate_partitioned)
+
+__all__ = [
+    "MB", "GB", "SimParams", "SimResult", "Invocation", "Engine", "Node",
+    "RuntimeInst", "PlatformModel", "OpenWhiskModel", "PhotonsModel",
+    "HydraModel", "HydraPoolModel", "HydraClusterModel", "MODELS",
+    "register_model", "Trace", "gen_trace", "load_azure_trace",
+    "discover_azure_tables", "simulate", "simulate_partitioned", "compare",
+]
+# the sim package stays the single source of truth for the public surface
+assert set(__all__) == set(_sim.__all__), "tracesim facade drifted"
 
 # old private names, kept for anything that poked at the internals
 _RuntimeInst = RuntimeInst

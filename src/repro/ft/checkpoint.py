@@ -137,6 +137,5 @@ def restore(ckpt_dir: str, step: int, template, *, shardings=None):
         sh = flat_s.get(key)
         leaves.append(jax.device_put(arr, sh) if sh is not None
                       else jax.numpy.asarray(arr))
-    keys_order = list(flat_t.keys())
     # rebuild in treedef order
     return jax.tree_util.tree_unflatten(treedef, leaves)

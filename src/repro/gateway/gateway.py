@@ -35,7 +35,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.cluster import AdaptivePoolPolicy, ArrivalRateEstimator
@@ -184,6 +184,8 @@ class Gateway:
                 return
             req.retries += 1
             self.recorder.retried()
+            # hydralint: disable=HL002 — deliberate OOM retry backoff on a
+            # worker thread, mirrors the sim engine's retry_backoff_s
             time.sleep(p.retry_backoff_s)
             tenant = self.workload.tenant_name(inv.tenant)
             with self._cv:
@@ -199,6 +201,8 @@ class Gateway:
         # emulated function body: the trace's duration at compressed
         # wall time (the invoke above covered only the platform path)
         if inv.duration_s > 0:
+            # hydralint: disable=HL002 — the emulated function body IS the
+            # workload: the trace duration at compressed wall time
             time.sleep(inv.duration_s / p.compress)
         latency_trace = (time.monotonic() - req.sched_wall) * p.compress
         self.recorder.record(latency_trace, inv.duration_s)
@@ -270,7 +274,8 @@ class Autoscaler:
         target = self.policy.target(rate)
         if target != self.platform.params.pool_size:
             self.platform.resize_pool(target)
-            self.resizes += 1
+            with self._lock:               # HL001: tick() races manual calls
+                self.resizes += 1
         return target
 
     def start(self) -> None:
@@ -327,6 +332,9 @@ class ClusterBalancer:
         self.rebalances = 0            # rebalance() calls that moved >= 1 fn
         self.moves = 0                 # functions migrated
         self.errors = 0
+        # HL001: counters are written by the balancer thread and read by
+        # the replay orchestrator for SimResult extras
+        self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -349,7 +357,8 @@ class ClusterBalancer:
 
     def tick(self) -> int:
         """One balancing decision; returns functions moved this tick."""
-        self.ticks += 1
+        with self._lock:
+            self.ticks += 1
         if not self.should_rebalance():
             return 0
         try:
@@ -357,11 +366,13 @@ class ClusterBalancer:
         except Exception:
             # a racing eviction/shutdown must not kill the balancer for
             # the rest of the replay
-            self.errors += 1
+            with self._lock:
+                self.errors += 1
             return 0
         if moved:
-            self.rebalances += 1
-            self.moves += moved
+            with self._lock:
+                self.rebalances += 1
+                self.moves += moved
         return moved
 
     def start(self) -> None:

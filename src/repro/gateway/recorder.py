@@ -184,8 +184,10 @@ class CalibrationProbe:
             per_runtime = list(self._per_runtime)
             peaks = list(self._node_peaks)
             rss0 = self._rss0
-        costs = {name: {"count": c, "sum": s, "mean": s / c}
-                 for name, (c, s) in self._window_costs().items()}
+            # HL001: _window_costs reads the _baseline snapshot that
+            # begin() populates under this lock
+            costs = {name: {"count": c, "sum": s, "mean": s / c}
+                     for name, (c, s) in self._window_costs().items()}
         rss_vals = [b for _, b in rss]
         return {
             "compress": self.compress,
@@ -308,9 +310,10 @@ class Recorder:
         if n_nodes is None:
             n_nodes = self.adapter.n_nodes
         c = self.adapter.counters()
-        iso_cold = max(self._iso_peak[0], c["cold_isolate"])
-        iso_warm = max(self._iso_peak[1], c["warm_isolate"])
         with self._lock:
+            # HL001: _iso_peak is maintained by the sampler thread
+            iso_cold = max(self._iso_peak[0], c["cold_isolate"])
+            iso_warm = max(self._iso_peak[1], c["warm_isolate"])
             res = SimResult(
                 model=f"live-{self.adapter.kind}",
                 latencies=list(self._latencies),

@@ -203,5 +203,12 @@ def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
             "migrations": cm.counters.get("migrations", 0),
             "transfer_s": cm.hist("transfer_s").sum,
             "transfer_bytes": cm.counters.get("transfer_bytes", 0),
+            # HL004: the cluster's own accounting of the same activity the
+            # balancer counts above — drift between the two pairs is a
+            # replay diagnostic, and the adaptive-pool resizes are the
+            # cluster analog of autoscaler_resizes
+            "rebalance_calls": cm.counters.get("rebalance.calls", 0),
+            "rebalance_moves": cm.counters.get("rebalance.moves", 0),
+            "pool_resizes": cm.counters.get("pool.resize", 0),
         }
     return res, extras

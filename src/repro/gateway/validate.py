@@ -331,22 +331,31 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-file", default=None,
                     help="Azure Functions 2019-format invocations CSV "
                          "(default: a small synthetic trace)")
-    ap.add_argument("--target-rps", type=float, default=None)
-    ap.add_argument("--max-minutes", type=int, default=None)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--target-rps", type=float, default=None,
+                    help="deterministically thin the trace to this mean rps")
+    ap.add_argument("--max-minutes", type=int, default=None,
+                    help="replay only the first N trace minutes")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for synthetic traces and thinning")
     ap.add_argument("--compress", type=float, default=60.0,
                     help="trace seconds replayed per wall second")
     ap.add_argument("--pool", type=int, default=4,
                     help="pre-warmed pool size (live and sim)")
-    ap.add_argument("--mem-scale", type=float, default=1.0 / 64)
-    ap.add_argument("--model", default="hydra-pool")
-    ap.add_argument("--workers", type=int, default=8)
-    ap.add_argument("--atol", type=int, default=COLD_ATOL)
-    ap.add_argument("--rtol", type=float, default=COLD_RTOL)
+    ap.add_argument("--mem-scale", type=float, default=1.0 / 64,
+                    help="trace function memory -> live arena scale")
+    ap.add_argument("--model", default="hydra-pool",
+                    help="sim model to diff the live replay against")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="gateway worker threads for the live replay")
+    ap.add_argument("--atol", type=int, default=COLD_ATOL,
+                    help="cold-start gate absolute allowance (count)")
+    ap.add_argument("--rtol", type=float, default=COLD_RTOL,
+                    help="cold-start gate relative allowance")
     ap.add_argument("--p99-atol-wall", type=float, default=P99_ATOL_WALL_S,
                     help="p99 gate absolute allowance in WALL seconds "
                          "(scaled by --compress)")
-    ap.add_argument("--p99-rtol", type=float, default=P99_RTOL)
+    ap.add_argument("--p99-rtol", type=float, default=P99_RTOL,
+                    help="p99 gate relative allowance")
     ap.add_argument("--round-trip", action="store_true",
                     help="derive a calibration from the live replay, "
                          "re-simulate with it, and require the "

@@ -10,7 +10,6 @@ Dispatch policy (``kernel_mode()``):
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
 

@@ -31,8 +31,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, applicable_shapes, get_config, list_archs
 from repro.launch.mesh import make_production_mesh
-from repro.launch.sharding import (AxisRules, default_rules, named_sharding_tree,
-                                   param_specs, use_rules)
+from repro.launch.sharding import (default_rules, named_sharding_tree,
+                                   use_rules)
 from repro.models.programs import ModelProgram
 from repro.optim import AdamW, constant
 
@@ -347,13 +347,20 @@ def _run_serve(prog, cfg, shape, mesh, rules, kv_seq=None) -> dict:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
-    ap.add_argument("--all", action="store_true")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--skip-existing", action="store_true")
-    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--arch", default=None,
+                    help="model architecture to dry-run (see --all)")
+    ap.add_argument("--shape", default=None,
+                    help="mesh shape name to dry-run against")
+    ap.add_argument("--all", action="store_true",
+                    help="dry-run every arch x applicable mesh shape")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="include multi-pod mesh variants")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="emit both 1D and 2D mesh layouts per cell")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose output JSON already exists")
+    ap.add_argument("--out", default="experiments/dryrun",
+                    help="output directory for per-cell JSON reports")
     args = ap.parse_args()
 
     cells = []

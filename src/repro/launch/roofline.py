@@ -71,7 +71,6 @@ def collective_bytes(hlo_text: str) -> dict:
     """Per-op-kind wire bytes (per device) summed over the module."""
     out: dict = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
                  "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _COLL_RE.search(line)
         if not m:

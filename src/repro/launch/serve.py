@@ -89,19 +89,30 @@ def build_target(args, arena_ttl_s=None):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--archs", default="qwen2.5-3b")
-    ap.add_argument("--tenants", type=int, default=2)
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--archs", default="qwen2.5-3b",
+                    help="comma-separated model architectures to serve "
+                         "(closed-loop LM driver)")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="tenants per architecture (each gets its own "
+                         "registered function)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="closed-loop requests to issue per tenant")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous-batching slots per LM runtime")
+    ap.add_argument("--max-seq", type=int, default=128,
+                    help="KV-cache sequence capacity per slot")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="synthetic prompt length in tokens")
+    ap.add_argument("--max-new", type=int, default=16,
+                    help="tokens to generate per request")
     ap.add_argument("--pool", type=int, default=2,
                     help="pre-warmed platform pool size (0 = raw runtime)")
     ap.add_argument("--nodes", type=int, default=0,
                     help="serve through a HydraCluster of this many nodes "
                          "(< 2 = single-node platform/runtime)")
-    ap.add_argument("--runtime-budget-gb", type=float, default=8.0)
+    ap.add_argument("--runtime-budget-gb", type=float, default=8.0,
+                    help="per-runtime memory budget in GiB (registration "
+                         "admission + arena capacity)")
     ap.add_argument("--node-memory-gb", type=float, default=16.0,
                     help="per-node placement budget (cluster mode)")
     ap.add_argument("--snapshot-dir", default=None,
@@ -130,7 +141,8 @@ def main(argv=None):
     ap.add_argument("--max-minutes", type=int, default=None,
                     help="replay only the first N trace minutes "
                          "(gateway mode)")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for synthetic traces and payloads")
     ap.add_argument("--mem-scale", type=float, default=1.0 / 64,
                     help="trace function memory -> live arena scale "
                          "(gateway mode)")
@@ -155,6 +167,20 @@ def main(argv=None):
                          "always validates the single-node platform "
                          "stack, so --nodes is ignored)")
     args = ap.parse_args(argv)
+
+    if not args.gateway:
+        # HL007 sweep: gateway-only flags silently did nothing without
+        # --gateway; reject the combos instead (parser.error exits 2)
+        gateway_only = [("--trace-file", args.trace_file is not None),
+                        ("--round-trip", args.round_trip),
+                        ("--target-rps", args.target_rps is not None),
+                        ("--max-minutes", args.max_minutes is not None),
+                        ("--slo-timeout", args.slo_timeout is not None),
+                        ("--tenant-rate", args.tenant_rate is not None)]
+        used = [flag for flag, on in gateway_only if on]
+        if used:
+            ap.error(f"{', '.join(used)} require(s) --gateway "
+                     f"(open-loop trace replay mode)")
 
     if args.gateway:
         return run_gateway(args)
@@ -213,7 +239,6 @@ def main(argv=None):
     # drain
     for b in batchers.values():
         b.run_until_done()
-    lat = [time.perf_counter() - ts for ts, f in futs]
     toks = sum(len(f.result()) for _, f in futs)
     dt = time.perf_counter() - t0
     for b in batchers.values():

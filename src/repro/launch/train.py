@@ -16,7 +16,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, Prefetcher
@@ -44,20 +43,34 @@ def build(args):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--n-micro", type=int, default=1)
-    ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--warmup", type=int, default=10)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=10)
-    ap.add_argument("--fail-at", type=int, default=None)
-    ap.add_argument("--compress", action="store_true")
-    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--arch", default="qwen2.5-3b",
+                    help="model architecture to train")
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the reduced config (default)")
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    help="use the full-size config instead of --reduced")
+    ap.add_argument("--steps", type=int, default=50,
+                    help="optimizer steps to run")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="global batch size")
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length")
+    ap.add_argument("--n-micro", type=int, default=1,
+                    help="microbatches per step (gradient accumulation)")
+    ap.add_argument("--lr", type=float, default=3e-4,
+                    help="peak learning rate")
+    ap.add_argument("--warmup", type=int, default=10,
+                    help="linear warmup steps")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="write checkpoints under this directory")
+    ap.add_argument("--ckpt-every", type=int, default=10,
+                    help="checkpoint interval in steps")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (restart drill)")
+    ap.add_argument("--compress", action="store_true",
+                    help="wrap the optimizer in error-feedback compression")
+    ap.add_argument("--remat", action="store_true",
+                    help="enable rematerialization (activation ckpting)")
     ap.add_argument("--data-model", default="1,1",
                     help="local mesh shape data,model")
     args = ap.parse_args(argv)

@@ -98,7 +98,6 @@ def attention_decode(p, x1, cfg, k_cache, v_cache, lengths, window=None):
         # windowed read: a sliding-window layer only ever attends to the
         # last `w` cache entries — slice before attention so HBM traffic is
         # O(w), not O(S) (the full cache is still updated above).
-        hd_ = k_cache.shape[-1]
         start = jnp.clip(lengths.astype(jnp.int32) + 1 - w, 0, S - w)
 
         def win(c, st):

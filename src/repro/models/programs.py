@@ -12,7 +12,6 @@ Entrypoints (all pure, jit/AOT-compile friendly):
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -92,7 +92,6 @@ def mamba_decode(p, x1, cfg, conv_state, ssm_state):
     """Single-token step. x1 (B,1,D); conv_state (B,k-1,cd); ssm_state f32."""
     B = x1.shape[0]
     din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
-    k = cfg.ssm_conv
     dt_ = x1.dtype
     zxbcdt = jnp.einsum("bsd,dk->bsk", x1, p["in_proj"].astype(dt_))
     z, xbc_pre, dt = _split_proj(zxbcdt[:, 0], cfg)

@@ -1,7 +1,7 @@
 """AdamW with global-norm clipping (fp32 moments, pytree-native)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 import jax

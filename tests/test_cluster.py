@@ -11,6 +11,7 @@ from repro.core import (AdaptivePoolPolicy, ArrivalRateEstimator,
 from repro.core.platform import estimate_bytes
 from repro.core.tracesim import (SimParams, gen_trace, simulate,
                                  simulate_partitioned)
+from tools.hydralint import locksan
 
 MB = 1 << 20
 GB = 1 << 30
@@ -128,23 +129,26 @@ def test_failed_migrate_does_not_orphan_function():
 
 def test_rebalance_drains_overloaded_node(tmp_path):
     need = estimate_bytes(spec())
-    cl = make_cluster(tmp_path, node_memory_bytes=8 * need)
-    try:
-        # all one tenant: colocation piles everything onto one node
-        for i in range(4):
-            cl.register_function(f"t0/f{i}", spec(f"f{i}"), tenant="t0")
-        nodes = set(cl.placement().values())
-        assert len(nodes) == 1
-        moves = cl.rebalance()
-        assert len(moves) == 2            # 4|0 -> 2|2
-        committed = [n.committed for n in cl.nodes]
-        assert max(committed) - min(committed) <= need
-        # a rebalanced (evicted) function restores lazily on next invoke
-        moved_fid = moves[0][0]
-        out = cl.invoke(moved_fid, ARGS)
-        assert float(out["y"][0]) == 7.0
-    finally:
-        cl.shutdown()
+    # locksan: rebalance nests the cluster lock over per-node platform,
+    # budget, and metrics locks — the order graph must stay acyclic.
+    with locksan.sanitized():
+        cl = make_cluster(tmp_path, node_memory_bytes=8 * need)
+        try:
+            # all one tenant: colocation piles everything onto one node
+            for i in range(4):
+                cl.register_function(f"t0/f{i}", spec(f"f{i}"), tenant="t0")
+            nodes = set(cl.placement().values())
+            assert len(nodes) == 1
+            moves = cl.rebalance()
+            assert len(moves) == 2            # 4|0 -> 2|2
+            committed = [n.committed for n in cl.nodes]
+            assert max(committed) - min(committed) <= need
+            # a rebalanced (evicted) function restores lazily on next invoke
+            moved_fid = moves[0][0]
+            out = cl.invoke(moved_fid, ARGS)
+            assert float(out["y"][0]) == 7.0
+        finally:
+            cl.shutdown()
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,7 @@ from repro.gateway import (Autoscaler, ClusterBalancer, Gateway,
                            sim_params_for_live, wrap_target)
 from repro.gateway.replay import build_workload
 from repro.gateway.validate import gate, round_trip_check
+from tools.hydralint import locksan
 
 MB = 1 << 20
 
@@ -40,13 +41,17 @@ def small_platform(compress=30.0, pool=1, budget=64 * MB):
 
 # ---------------------------------------------------------------------------
 def test_replay_emits_simresult_schema_and_full_accounting():
-    trace = make_trace(n=24, gap_s=0.4)
-    plat = small_platform(compress=30.0)
-    try:
-        res, extras = replay_trace(trace, plat,
-                                   ReplayConfig(compress=30.0, n_workers=4))
-    finally:
-        plat.shutdown()
+    # locksan: the full replay stack (gateway workers, recorder sampler,
+    # platform janitor) runs under the lock-order sanitizer — the platform
+    # is built inside the patch so every lock it creates is wrapped.
+    with locksan.sanitized():
+        trace = make_trace(n=24, gap_s=0.4)
+        plat = small_platform(compress=30.0)
+        try:
+            res, extras = replay_trace(
+                trace, plat, ReplayConfig(compress=30.0, n_workers=4))
+        finally:
+            plat.shutdown()
     assert isinstance(res, SimResult)
     # EXACT summary schema parity with the simulator
     assert set(res.summary()) == set(SimResult(model="x").summary())

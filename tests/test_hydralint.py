@@ -1,0 +1,541 @@
+"""hydralint self-tests: every checker must flag the known-bad shape it
+was built from (PR 4/5 bug classes) and pass the fixed shape; the
+baseline may only shrink; inline/scoped suppressions work; and the
+runtime lock sanitizer catches an A/B-B/A inversion.  Finally, the real
+tree must lint clean — the CI gate this PR adds."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import pytest
+
+from tools.hydralint import load_baseline, run_lint, write_baseline
+from tools.hydralint import locksan
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint_fixture(tmp_path, files, select):
+    """Write {relpath: source} under tmp_path and lint it."""
+    paths = []
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+        paths.append(rel)
+    return run_lint(paths, tmp_path, select={select})
+
+
+# ---------------------------------------------------------------------------
+# HL001 lock discipline
+# ---------------------------------------------------------------------------
+BAD_LOCK = """\
+    import threading
+
+    class Metrics:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._c = {}
+
+        def inc(self, name):
+            with self._lock:
+                self._c[name] = self._c.get(name, 0) + 1
+
+        def read(self, name):
+            return self._c.get(name, 0)
+"""
+
+GOOD_LOCK = BAD_LOCK.replace(
+    "        def read(self, name):\n"
+    "            return self._c.get(name, 0)\n",
+    "        def read(self, name):\n"
+    "            with self._lock:\n"
+    "                return self._c.get(name, 0)\n")
+
+
+def test_hl001_flags_unguarded_read_of_locked_attr(tmp_path):
+    res = lint_fixture(tmp_path, {"src/m.py": BAD_LOCK}, "HL001")
+    assert [f.detail for f in res.findings] == ["Metrics.read:_c"]
+    assert "without it" in res.findings[0].message
+
+
+def test_hl001_passes_when_all_access_is_locked(tmp_path):
+    res = lint_fixture(tmp_path, {"src/m.py": GOOD_LOCK}, "HL001")
+    assert res.findings == []
+
+
+def test_hl001_condition_aliases_to_wrapped_lock(tmp_path):
+    src = """\
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cv = threading.Condition(self._lock)
+                self._items = []
+
+            def put(self, x):
+                with self._lock:
+                    self._items.append(x)
+
+            def drain(self):
+                with self._cv:          # same lock: no finding
+                    return list(self._items)
+    """
+    res = lint_fixture(tmp_path, {"src/q.py": src}, "HL001")
+    assert res.findings == []
+
+
+def test_hl001_rmw_in_thread_owning_class(tmp_path):
+    src = """\
+        import threading
+
+        class Ticker:
+            def __init__(self):
+                self.ticks = 0
+                self._t = threading.Thread(target=self.run)
+
+            def run(self):
+                self.ticks += 1
+    """
+    res = lint_fixture(tmp_path, {"src/t.py": src}, "HL001")
+    assert [f.detail for f in res.findings] == ["Ticker.run:ticks:rmw"]
+
+
+def test_hl001_caller_holds_lock_helper_pattern(tmp_path):
+    src = """\
+        import threading
+
+        class G:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._q = []
+
+            def submit(self, x):
+                with self._lock:
+                    self._q.append(x)
+                    self._next()
+
+            def _next(self):
+                # caller holds the lock (every call site does)
+                return self._q.pop(0)
+    """
+    res = lint_fixture(tmp_path, {"src/g.py": src}, "HL001")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# HL002 hot-path purity
+# ---------------------------------------------------------------------------
+BAD_HOTPATH = """\
+    import jax.numpy as jnp
+    import numpy as np
+
+    class Gateway:
+        def _worker_loop(self):
+            return self._payload()
+
+        def _payload(self):
+            # the PR 5 args_for bug shape: eager device-array per request
+            return jnp.full((64,), 3.0)
+"""
+
+GOOD_HOTPATH = BAD_HOTPATH.replace("jnp.full((64,), 3.0)",
+                                   "np.full((64,), 3.0)")
+
+
+def test_hl002_flags_eager_jnp_reachable_from_root(tmp_path):
+    res = lint_fixture(tmp_path, {"src/gw.py": BAD_HOTPATH}, "HL002")
+    assert len(res.findings) == 1
+    f = res.findings[0]
+    assert "jnp.full" in f.message
+    assert "Gateway._worker_loop" in f.message    # names the root
+    assert f.detail.startswith("Gateway._payload:")
+
+
+def test_hl002_host_numpy_is_fine(tmp_path):
+    res = lint_fixture(tmp_path, {"src/gw.py": GOOD_HOTPATH}, "HL002")
+    assert res.findings == []
+
+
+def test_hl002_marker_declares_extra_root(tmp_path):
+    src = """\
+        import time
+
+        def claim():  # hydralint: hot-path-root
+            time.sleep(0.1)
+    """
+    res = lint_fixture(tmp_path, {"src/a.py": src}, "HL002")
+    assert [f.detail for f in res.findings] == ["claim:time.sleep:0"]
+
+
+def test_hl002_scoped_disable_cuts_traversal(tmp_path):
+    src = """\
+        import time
+
+        class Gateway:
+            def _worker_loop(self):
+                return self._register()
+
+            # registration cost is modeled, not hot-path
+            def _register(self):  # hydralint: disable=HL002
+                time.sleep(0.1)
+    """
+    res = lint_fixture(tmp_path, {"src/gw.py": src}, "HL002")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# HL003 sim determinism
+# ---------------------------------------------------------------------------
+def test_hl003_flags_wallclock_and_unseeded_rng(tmp_path):
+    src = """\
+        # hydralint: sim-module
+        import random
+        import time
+
+        def step(pending):
+            now = time.time()
+            jitter = random.random()
+            for node in {1, 2, 3}:
+                pass
+            return now + jitter
+    """
+    res = lint_fixture(tmp_path, {"src/core/sim2.py": src}, "HL003")
+    details = sorted(f.detail for f in res.findings)
+    assert details == ["set-iter:L8", "unseeded:random.random",
+                       "wallclock:time.time"]
+
+
+def test_hl003_seeded_rng_and_sorted_iter_pass(tmp_path):
+    src = """\
+        # hydralint: sim-module
+        import numpy as np
+
+        def step(nodes, seed):
+            rng = np.random.default_rng(seed)
+            for node in sorted(nodes):
+                pass
+            return rng.random()
+    """
+    res = lint_fixture(tmp_path, {"src/core/sim2.py": src}, "HL003")
+    assert res.findings == []
+
+
+def test_hl003_ignores_non_sim_files(tmp_path):
+    src = "import time\n\ndef now():\n    return time.time()\n"
+    res = lint_fixture(tmp_path, {"src/other.py": src}, "HL003")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# HL004 metric vocabulary
+# ---------------------------------------------------------------------------
+EMITTER = """\
+    class Node:
+        def __init__(self, metrics):
+            self.metrics = metrics
+
+        def boot(self):
+            self.metrics.inc("pool.miss")
+"""
+
+MAPPING_WITH = 'WIRED = {"pool.miss": "cold_runtime"}\n'
+MAPPING_WITHOUT = 'WIRED = {}\n'
+
+
+def test_hl004_flags_unmapped_live_metric(tmp_path):
+    res = lint_fixture(tmp_path, {"src/gateway/node.py": EMITTER,
+                                  "src/gateway/replay.py": MAPPING_WITHOUT},
+                       "HL004")
+    assert [f.detail for f in res.findings] == ["unmapped:pool.miss"]
+
+
+def test_hl004_mapped_metric_passes(tmp_path):
+    res = lint_fixture(tmp_path, {"src/gateway/node.py": EMITTER,
+                                  "src/gateway/replay.py": MAPPING_WITH},
+                       "HL004")
+    assert res.findings == []
+
+
+def test_hl004_flags_phantom_read(tmp_path):
+    mapping = 'def pull(cm):\n    return cm.counters.get("ghost.metric", 0)\n'
+    res = lint_fixture(tmp_path, {"src/gateway/node.py": EMITTER,
+                                  "src/gateway/replay.py": mapping},
+                       "HL004")
+    assert "phantom:ghost.metric" in [f.detail for f in res.findings]
+
+
+def test_hl004_counters_key_parity_across_adapters(tmp_path):
+    targets = """\
+        class A:
+            def counters(self):
+                return {"cold": 1, "warm": 2}
+
+        class B:
+            def counters(self):
+                return {"cold": 1}
+    """
+    res = lint_fixture(tmp_path, {"src/gateway/targets.py": targets},
+                       "HL004")
+    assert [f.detail for f in res.findings] == ["counters-parity:B"]
+
+
+# ---------------------------------------------------------------------------
+# HL005 adapter conformance
+# ---------------------------------------------------------------------------
+def test_hl005_flags_missing_base_attr_and_unimplemented(tmp_path):
+    targets = """\
+        class TargetAdapter:
+            def invoke(self, fid, args):
+                raise NotImplementedError
+
+        class PlatformTarget(TargetAdapter):
+            pass
+    """
+    user = """\
+        def drive(adapter):
+            adapter.invoke("f", {})
+            adapter.sample()
+    """
+    res = lint_fixture(tmp_path, {"src/gateway/targets.py": targets,
+                                  "src/gateway/replay.py": user}, "HL005")
+    assert sorted(f.detail for f in res.findings) == [
+        "base-missing:sample", "unimplemented:PlatformTarget.invoke"]
+
+
+def test_hl005_full_surface_passes(tmp_path):
+    targets = """\
+        class TargetAdapter:
+            n_nodes = 1
+
+            def invoke(self, fid, args):
+                raise NotImplementedError
+
+        class PlatformTarget(TargetAdapter):
+            def invoke(self, fid, args):
+                return {}
+    """
+    user = """\
+        def drive(adapter):
+            adapter.invoke("f", {})
+            return adapter.n_nodes
+    """
+    res = lint_fixture(tmp_path, {"src/gateway/targets.py": targets,
+                                  "src/gateway/replay.py": user}, "HL005")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# HL006 docs references
+# ---------------------------------------------------------------------------
+def test_hl006_flags_dangling_ref_and_missing_module(tmp_path):
+    (tmp_path / "README.md").write_text(
+        "See `missing_file.py` for details.\n\n"
+        "```bash\npython -m nope.mod\n```\n")
+    res = run_lint([], tmp_path, select={"HL006"})
+    assert sorted(f.detail for f in res.findings) == [
+        "module:nope.mod", "ref:missing_file.py"]
+
+
+def test_hl006_resolved_refs_pass(tmp_path):
+    (tmp_path / "real.py").write_text("x = 1\n")
+    (tmp_path / "README.md").write_text(
+        "See `real.py`.\n\n```bash\npython real.py\n```\n")
+    res = run_lint([], tmp_path, select={"HL006"})
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# HL007 argparse hygiene
+# ---------------------------------------------------------------------------
+def test_hl007_flags_missing_and_empty_help(tmp_path):
+    src = """\
+        import argparse
+
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--good", help="does a thing")
+        ap.add_argument("--bare")
+        ap.add_argument("--blank", help="")
+    """
+    res = lint_fixture(tmp_path, {"src/cli.py": src}, "HL007")
+    assert sorted(f.detail for f in res.findings) == [
+        "empty-help:--blank", "no-help:--bare"]
+
+
+# ---------------------------------------------------------------------------
+# suppression mechanics
+# ---------------------------------------------------------------------------
+def test_inline_disable_suppresses_and_is_counted(tmp_path):
+    src = BAD_LOCK.replace(
+        "return self._c.get(name, 0)",
+        "return self._c.get(name, 0)  # hydralint: disable=HL001 — stale ok")
+    res = lint_fixture(tmp_path, {"src/m.py": src}, "HL001")
+    assert res.findings == []
+    assert [f.detail for f in res.suppressed] == ["Metrics.read:_c"]
+
+
+def test_disable_on_comment_line_covers_next_statement(tmp_path):
+    src = BAD_LOCK.replace(
+        "            return self._c.get(name, 0)",
+        "            # hydralint: disable=HL001 — approximate read is fine\n"
+        "            return self._c.get(name, 0)")
+    res = lint_fixture(tmp_path, {"src/m.py": src}, "HL001")
+    assert res.findings == []
+
+
+def test_scoped_disable_on_def_covers_body(tmp_path):
+    src = BAD_LOCK.replace(
+        "def read(self, name):",
+        "def read(self, name):  # hydralint: disable=HL001")
+    res = lint_fixture(tmp_path, {"src/m.py": src}, "HL001")
+    assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
+# baseline: shrink-only
+# ---------------------------------------------------------------------------
+def test_baseline_masks_known_findings_and_flags_stale(tmp_path):
+    res = lint_fixture(tmp_path, {"src/m.py": BAD_LOCK}, "HL001")
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(bl_path, res.findings)
+    baseline = load_baseline(bl_path)
+    assert res.new_against(baseline) == []
+
+    # fixing the bug leaves the baseline entry stale -> must be removed
+    fixed = lint_fixture(tmp_path, {"src/m.py": GOOD_LOCK}, "HL001")
+    assert fixed.new_against(baseline) == []
+    stale = fixed.stale_baseline_keys(baseline)
+    assert stale and stale[0].startswith("HL001::src/m.py::")
+
+
+def test_baseline_key_is_line_number_stable(tmp_path):
+    res1 = lint_fixture(tmp_path, {"src/m.py": BAD_LOCK}, "HL001")
+    shifted = "# a new leading comment\n" + textwrap.dedent(BAD_LOCK)
+    res2 = lint_fixture(tmp_path, {"src/m.py": shifted}, "HL001")
+    assert [f.key for f in res1.findings] == [f.key for f in res2.findings]
+    assert res1.findings[0].line != res2.findings[0].line
+
+
+def test_missing_baseline_file_is_empty():
+    assert load_baseline("/nonexistent/baseline.json") == {}
+
+
+# ---------------------------------------------------------------------------
+# CLI: the CI gate fails on a seeded regression and on stale baseline
+# ---------------------------------------------------------------------------
+def _run_cli(args, cwd):
+    env = dict(os.environ, PYTHONPATH=REPO_ROOT)
+    return subprocess.run([sys.executable, "-m", "tools.hydralint", *args],
+                          cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "src" / "m.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(textwrap.dedent(BAD_LOCK))
+
+    r = _run_cli(["src", "--root", str(tmp_path), "--select", "HL001"],
+                 cwd=REPO_ROOT)
+    assert r.returncode == 1
+    assert "HL001" in r.stdout
+
+    bad.write_text(textwrap.dedent(GOOD_LOCK))
+    r = _run_cli(["src", "--root", str(tmp_path), "--select", "HL001"],
+                 cwd=REPO_ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+    # stale baseline entries fail even on a clean tree (shrink-only)
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps(
+        {"version": 1, "findings": {"HL001::src/m.py::Gone.read:_x": "old"}}))
+    r = _run_cli(["src", "--root", str(tmp_path), "--select", "HL001",
+                  "--baseline", str(bl)], cwd=REPO_ROOT)
+    assert r.returncode == 1
+    assert "stale" in (r.stdout + r.stderr).lower()
+
+
+# ---------------------------------------------------------------------------
+# locksan: runtime lock-order sanitizer
+# ---------------------------------------------------------------------------
+def test_locksan_detects_ab_ba_inversion():
+    san = locksan.LockOrderSanitizer()
+    a = san.make_lock("A")
+    b = san.make_lock("B")
+
+    def t1():
+        with a:
+            with b:
+                pass
+
+    def t2():
+        with b:
+            with a:
+                pass
+
+    th1 = threading.Thread(target=t1)
+    th1.start()
+    th1.join()
+    th2 = threading.Thread(target=t2)
+    th2.start()
+    th2.join()
+    reports = san.check()
+    assert len(reports) == 1
+    assert "A" in reports[0] and "B" in reports[0]
+    with pytest.raises(locksan.LockOrderViolation):
+        san.assert_clean()
+
+
+def test_locksan_consistent_order_is_clean():
+    san = locksan.LockOrderSanitizer()
+    a = san.make_lock("A")
+    b = san.make_lock("B")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert san.check() == []
+    san.assert_clean()
+
+
+def test_locksan_condition_and_handoff_locks_not_false_positives():
+    with locksan.sanitized() as san:
+        cv = threading.Condition()
+        done = []
+
+        def waiter():
+            with cv:
+                while not done:
+                    cv.wait(timeout=5.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        with cv:
+            done.append(1)
+            cv.notify()
+        t.join(timeout=10.0)
+    assert san.check() == []
+
+
+def test_locksan_sanitized_raises_on_inversion():
+    with pytest.raises(locksan.LockOrderViolation):
+        with locksan.sanitized():
+            a = threading.Lock()
+            b = threading.Lock()
+            with a:
+                with b:
+                    pass
+            with b:
+                with a:
+                    pass
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean — the gate this PR turns on in CI
+# ---------------------------------------------------------------------------
+def test_real_tree_lints_clean():
+    res = run_lint(["src", "tests"], REPO_ROOT)
+    assert res.findings == [], "\n".join(f.render() for f in res.findings)

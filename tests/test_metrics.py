@@ -5,6 +5,7 @@ import math
 import threading
 
 from repro.core.metrics import Histogram, Metrics
+from tools.hydralint import locksan
 
 N_THREADS = 8
 N_OPS = 500
@@ -31,62 +32,67 @@ def _run_threads(fn):
 
 
 def test_counter_hammer_loses_no_increments():
-    m = Metrics()
+    # locksan: Metrics constructed INSIDE the patch so its lock is wrapped
+    with locksan.sanitized():
+        m = Metrics()
 
-    def work(i):
-        for _ in range(N_OPS):
-            m.inc("shared")
-            m.inc(f"per.{i % 3}", 2)
+        def work(i):
+            for _ in range(N_OPS):
+                m.inc("shared")
+                m.inc(f"per.{i % 3}", 2)
 
-    _run_threads(work)
+        _run_threads(work)
     assert m.counters["shared"] == N_THREADS * N_OPS
     total = sum(m.counters[f"per.{k}"] for k in range(3))
     assert total == N_THREADS * N_OPS * 2
 
 
 def test_histogram_hammer_loses_no_observations():
-    m = Metrics()
+    with locksan.sanitized():
+        m = Metrics()
 
-    def work(i):
-        for j in range(N_OPS):
-            # fresh names force the creation race the old defaultdict
-            # pattern lost observations on
-            m.observe(f"h{(i * N_OPS + j) % 7}", float(j))
-            m.observe("shared_hist", 1.0)
+        def work(i):
+            for j in range(N_OPS):
+                # fresh names force the creation race the old defaultdict
+                # pattern lost observations on
+                m.observe(f"h{(i * N_OPS + j) % 7}", float(j))
+                m.observe("shared_hist", 1.0)
 
-    _run_threads(work)
+        _run_threads(work)
     assert m.hists["shared_hist"].count == N_THREADS * N_OPS
     spread = sum(m.hists[f"h{k}"].count for k in range(7))
     assert spread == N_THREADS * N_OPS
 
 
 def test_snapshot_under_concurrent_writes_is_consistent():
-    m = Metrics()
-    stop = threading.Event()
-    snaps = []
+    with locksan.sanitized():
+        m = Metrics()
+        stop = threading.Event()
+        snaps = []
 
-    def writer(i):
-        k = 0
-        while not stop.is_set() and k < N_OPS * 4:
-            m.inc("c")
-            m.observe(f"dyn.{k % 11}", k)
-            with m.timeit("timed"):
-                pass
-            k += 1
+        def writer(i):
+            k = 0
+            while not stop.is_set() and k < N_OPS * 4:
+                m.inc("c")
+                m.observe(f"dyn.{k % 11}", k)
+                with m.timeit("timed"):
+                    pass
+                k += 1
 
-    def reader():
-        while not stop.is_set():
-            snaps.append(m.snapshot())
+        def reader():
+            while not stop.is_set():
+                snaps.append(m.snapshot())
 
-    threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
-    r = threading.Thread(target=reader)
-    for t in threads:
-        t.start()
-    r.start()
-    for t in threads:
-        t.join(timeout=30.0)
-    stop.set()
-    r.join(timeout=10.0)
+        threads = [threading.Thread(target=writer, args=(i,))
+                   for i in range(4)]
+        r = threading.Thread(target=reader)
+        for t in threads:
+            t.start()
+        r.start()
+        for t in threads:
+            t.join(timeout=30.0)
+        stop.set()
+        r.join(timeout=10.0)
     assert snaps, "reader never snapshotted"
     final = m.snapshot()
     assert final["counters"]["c"] == 4 * N_OPS * 4

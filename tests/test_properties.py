@@ -1,6 +1,4 @@
 """Hypothesis property tests on system invariants."""
-import threading
-
 import jax
 import jax.numpy as jnp
 import numpy as np

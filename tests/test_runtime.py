@@ -2,7 +2,6 @@
 code-cache sharing, arena pooling, budgets, continuous batching."""
 import time
 
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -6,12 +6,11 @@ import sys
 import textwrap
 
 import jax
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch.mesh import make_mesh
-from repro.launch.sharding import (AxisRules, default_rules, logical_spec,
+from repro.launch.sharding import (default_rules, logical_spec,
                                    param_specs, use_rules)
 from repro.models import transformer as tf
 

@@ -2,95 +2,35 @@
 
   python tools/check_docs.py
 
-1. Every file-path-looking reference in README.md and docs/*.md must
-   point at a real file in the repo (exact path, or unique suffix for
-   bare names like ``serve.py``).
-2. Every ``python <script>`` / ``python -m <module>`` command shown in a
-   fenced code block must resolve to a shipped script/module, and the
-   script must at least byte-compile.
-
-Exits non-zero with a report when anything dangles.
+Thin shim over the hydralint HL006 checker (``tools.hydralint.docsref``)
+so the documented command and the CI docs job keep working; the same
+check also runs inside ``python -m tools.hydralint``.
 """
 from __future__ import annotations
 
-import py_compile
-import re
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
 
-CMD_RE = re.compile(
-    r"(?:PYTHONPATH=\S+\s+)?python3?\s+(-m\s+[A-Za-z0-9_.]+|[A-Za-z0-9_./-]+\.py)")
-
-
-def doc_files() -> list:
-    docs = [ROOT / "README.md"]
-    docs += sorted((ROOT / "docs").glob("*.md"))
-    return [d for d in docs if d.exists()]
-
-
-def resolve(ref: str):
-    """A reference resolves if it exists relative to the repo root or is
-    a unique basename/suffix of a tracked file."""
-    if (ROOT / ref).exists():
-        return ROOT / ref
-    matches = [p for p in ROOT.rglob(Path(ref).name)
-               if p.is_file() and str(p).endswith("/" + ref)
-               and ".git" not in p.parts]
-    return matches[0] if len(matches) == 1 else None
+from tools.hydralint import docsref  # noqa: E402
 
 
 def main() -> int:
-    errors = []
-    fence = re.compile(r"```[a-z]*\n(.*?)```", re.S)
-    for doc in doc_files():
-        text = doc.read_text()
-        rel = doc.relative_to(ROOT)
-
-        # 1) file references (skip globs)
-        for m in re.finditer(
-                r"[A-Za-z0-9_][A-Za-z0-9_./*-]*\.(?:py|md|yml|yaml|txt)\b",
-                text):
-            ref = m.group(0)
-            if "*" in ref:
-                continue
-            if resolve(ref) is None:
-                errors.append(f"{rel}: dangling file reference: {ref}")
-
-        # 2) commands in fenced code blocks
-        for block in fence.findall(text):
-            for cmd in CMD_RE.finditer(block):
-                target = cmd.group(1)
-                if target.startswith("-m"):
-                    mod = target.split()[-1]
-                    if mod == "pytest":
-                        continue
-                    path = ROOT / "src" / Path(*mod.split("."))
-                    if not (path.with_suffix(".py").exists()
-                            or (path / "__init__.py").exists()):
-                        errors.append(f"{rel}: command references missing "
-                                      f"module: {mod}")
-                else:
-                    script = resolve(target)
-                    if script is None:
-                        errors.append(f"{rel}: command references missing "
-                                      f"script: {target}")
-                        continue
-                    try:
-                        py_compile.compile(str(script), doraise=True)
-                    except py_compile.PyCompileError as e:
-                        errors.append(f"{rel}: {target} does not compile: "
-                                      f"{e}")
-
-    if not doc_files():
-        errors.append("no docs found (README.md / docs/*.md)")
-    for e in errors:
-        print(f"[check_docs] {e}", file=sys.stderr)
-    if not errors:
-        print(f"[check_docs] OK: {len(doc_files())} docs, all file "
+    findings = docsref.check_docs(ROOT)
+    docs = docsref.doc_files(ROOT)
+    if not docs:
+        findings = list(findings)
+        print("[check_docs] no docs found (README.md / docs/*.md)",
+              file=sys.stderr)
+        return 1
+    for f in findings:
+        print(f"[check_docs] {f.path}: {f.message}", file=sys.stderr)
+    if not findings:
+        print(f"[check_docs] OK: {len(docs)} docs, all file "
               "references and commands resolve")
-    return 1 if errors else 0
+    return 1 if findings else 0
 
 
 if __name__ == "__main__":

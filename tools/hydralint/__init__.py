@@ -1,0 +1,305 @@
+"""hydralint: repo-specific static analysis for the Hydra reproduction.
+
+The repo's last few PRs kept hand-fixing the same defect classes: shared
+state racing past a lock, eager ``jnp`` work sneaking onto the replay
+hot path, sim code drifting off determinism, and live metric names
+falling out of the ``SimResult`` vocabulary the calibration round trip
+depends on.  hydralint encodes each class as an AST checker (stdlib
+``ast`` only — no new dependencies) so the invariant is enforced by CI
+instead of reviewer memory.
+
+Usage::
+
+    python -m tools.hydralint src/ tests/ --baseline tools/hydralint/baseline.json
+
+Checkers (see ``docs/development.md`` for rationale + history):
+
+  HL001  lock discipline       tools/hydralint/lockcheck.py
+  HL002  hot-path purity       tools/hydralint/purity.py
+  HL003  sim determinism       tools/hydralint/determinism.py
+  HL004  metric vocabulary     tools/hydralint/vocab.py
+  HL005  adapter conformance   tools/hydralint/adapters.py
+  HL006  docs references       tools/hydralint/docsref.py
+  HL007  argparse hygiene      tools/hydralint/clihygiene.py
+
+Suppression: append ``# hydralint: disable=HL00X`` (comma-separate for
+several codes) to the offending line, with a short justification in the
+same comment.  Placing the comment on a ``def``/``class`` line (or in a
+multi-line signature) scopes it to the whole body; for HL002 a scoped
+suppression also stops call-graph traversal through that function.
+
+Baseline: ``baseline.json`` maps finding keys -> messages.  Findings in
+the baseline do not fail lint, but the baseline may only shrink — an
+entry that no longer matches any finding is itself an error, so fixed
+debt cannot silently regress.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, Optional
+
+DISABLE_RE = re.compile(r"#\s*hydralint:\s*disable=([A-Za-z0-9_, ]+)")
+MARKER_RE = re.compile(r"#\s*hydralint:\s*([a-z-]+)\b")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint finding.
+
+    ``detail`` is the stable identity component (symbol names, not line
+    numbers) so baseline entries survive unrelated edits to the file.
+    """
+    code: str
+    path: str          # posix path relative to the project root
+    line: int
+    col: int
+    message: str
+    detail: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.code}::{self.path}::{self.detail}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+@dataclass
+class FuncInfo:
+    qualname: str                      # e.g. "Gateway._serve" or "main"
+    node: ast.AST                      # FunctionDef / AsyncFunctionDef
+    cls: Optional[ast.ClassDef] = None # enclosing class, if a method
+
+
+@dataclass
+class SourceFile:
+    path: str                          # posix, relative to root
+    source: str
+    tree: ast.Module
+    lines: list = field(default_factory=list)
+    line_disables: dict = field(default_factory=dict)   # line -> set(codes)
+    scope_disables: list = field(default_factory=list)  # (start, end, codes, qualname)
+    markers: dict = field(default_factory=dict)         # line -> set(marker words)
+    funcs: list = field(default_factory=list)           # [FuncInfo]
+
+    def func_by_qualname(self, qualname: str) -> Optional[FuncInfo]:
+        for fi in self.funcs:
+            if fi.qualname == qualname:
+                return fi
+        return None
+
+    def has_marker(self, word: str) -> bool:
+        return any(word in words for words in self.markers.values())
+
+    def marker_lines(self, word: str) -> set:
+        return {ln for ln, words in self.markers.items() if word in words}
+
+
+class Project:
+    """All parsed sources under the lint roots, plus the repo root for
+    checkers (HL006) that look at non-Python files."""
+
+    def __init__(self, root: Path, files: list, parse_findings: list):
+        self.root = Path(root)
+        self.files = files
+        self.parse_findings = parse_findings
+        self.by_path = {f.path: f for f in files}
+
+    @classmethod
+    def load(cls, root, paths: Iterable) -> "Project":
+        root = Path(root).resolve()
+        seen, files, parse_findings = set(), [], []
+        for p in paths:
+            p = Path(p)
+            if not p.is_absolute():
+                p = root / p
+            if p.is_dir():
+                candidates = sorted(p.rglob("*.py"))
+            else:
+                candidates = [p]
+            for f in candidates:
+                if "__pycache__" in f.parts or ".git" in f.parts:
+                    continue
+                f = f.resolve()
+                if f in seen or not f.exists():
+                    continue
+                seen.add(f)
+                try:
+                    rel = f.relative_to(root).as_posix()
+                except ValueError:
+                    rel = f.as_posix()
+                source = f.read_text()
+                try:
+                    tree = ast.parse(source, filename=rel)
+                except SyntaxError as e:
+                    parse_findings.append(Finding(
+                        "HL000", rel, e.lineno or 1, (e.offset or 1) - 1,
+                        f"syntax error: {e.msg}", f"syntax:{e.msg}"))
+                    continue
+                files.append(_build_source_file(rel, source, tree))
+        return cls(root, files, parse_findings)
+
+    def iter_funcs(self):
+        for sf in self.files:
+            for fi in sf.funcs:
+                yield sf, fi
+
+    def is_suppressed(self, f: Finding) -> bool:
+        sf = self.by_path.get(f.path)
+        if sf is None:
+            return False
+        if f.code in sf.line_disables.get(f.line, ()):
+            return True
+        for start, end, codes, _qn in sf.scope_disables:
+            if start <= f.line <= end and f.code in codes:
+                return True
+        return False
+
+    def scope_suppressed_qualnames(self, code: str) -> set:
+        """(path, qualname) pairs whose whole body suppresses ``code``."""
+        out = set()
+        for sf in self.files:
+            for _s, _e, codes, qn in sf.scope_disables:
+                if qn and code in codes:
+                    out.add((sf.path, qn))
+        return out
+
+
+def _build_source_file(rel: str, source: str, tree: ast.Module) -> SourceFile:
+    lines = source.splitlines()
+    sf = SourceFile(rel, source, tree, lines)
+    for i, text in enumerate(lines, start=1):
+        m = DISABLE_RE.search(text)
+        if m:
+            codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+            sf.line_disables.setdefault(i, set()).update(codes)
+        for mm in MARKER_RE.finditer(text):
+            if mm.group(1) != "disable":
+                sf.markers.setdefault(i, set()).add(mm.group(1))
+
+    # A disable on a comment-only line covers the next code line, so the
+    # justification can be written above the statement it annotates.
+    for i in sorted(sf.line_disables):
+        if not lines[i - 1].lstrip().startswith("#"):
+            continue
+        j = i + 1
+        while j <= len(lines) and (not lines[j - 1].strip()
+                                   or lines[j - 1].lstrip().startswith("#")):
+            j += 1
+        if j <= len(lines):
+            sf.line_disables.setdefault(j, set()).update(sf.line_disables[i])
+
+    # Function index with qualnames, and scope-level suppressions: a
+    # disable comment anywhere in a def/class signature covers the body.
+    def visit(node, prefix, cls):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = prefix + child.name
+                sf.funcs.append(FuncInfo(qn, child, cls))
+                _scope_disables(sf, child, qn)
+                visit(child, qn + ".", cls)
+            elif isinstance(child, ast.ClassDef):
+                qn = prefix + child.name
+                _scope_disables(sf, child, qn)
+                visit(child, qn + ".", child)
+    visit(tree, "", None)
+    return sf
+
+
+def _scope_disables(sf: SourceFile, node, qualname: str) -> None:
+    body_start = node.body[0].lineno if node.body else node.lineno
+    sig_lines = range(node.lineno, max(node.lineno, body_start - 1) + 1)
+    codes = set()
+    for ln in sig_lines:
+        codes |= sf.line_disables.get(ln, set())
+    if codes:
+        sf.scope_disables.append(
+            (node.lineno, node.end_lineno or node.lineno, codes, qualname))
+
+
+# ---------------------------------------------------------------------------
+# checker registry
+
+def all_checkers():
+    from tools.hydralint import (adapters, clihygiene, determinism, docsref,
+                                 lockcheck, purity, vocab)
+    return [
+        ("HL001", lockcheck.check),
+        ("HL002", purity.check),
+        ("HL003", determinism.check),
+        ("HL004", vocab.check),
+        ("HL005", adapters.check),
+        ("HL006", docsref.check),
+        ("HL007", clihygiene.check),
+    ]
+
+
+@dataclass
+class LintResult:
+    findings: list                     # unsuppressed findings
+    suppressed: list                   # findings silenced by inline disables
+
+    def new_against(self, baseline: dict) -> list:
+        return [f for f in self.findings if f.key not in baseline]
+
+    def stale_baseline_keys(self, baseline: dict) -> list:
+        live = {f.key for f in self.findings}
+        return sorted(k for k in baseline if k not in live)
+
+
+def run_lint(paths: Iterable, root, select: Optional[set] = None) -> LintResult:
+    project = Project.load(root, paths)
+    findings = list(project.parse_findings)
+    for code, check in all_checkers():
+        if select and code not in select:
+            continue
+        findings.extend(check(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.code))
+    kept = [f for f in findings if not project.is_suppressed(f)]
+    supp = [f for f in findings if project.is_suppressed(f)]
+    return LintResult(kept, supp)
+
+
+# ---------------------------------------------------------------------------
+# baseline
+
+def load_baseline(path) -> dict:
+    path = Path(path)
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    return dict(data.get("findings", {}))
+
+
+def write_baseline(path, findings: Iterable) -> None:
+    payload = {
+        "version": 1,
+        "note": "hydralint debt ledger: may only shrink. Prefer fixing or "
+                "an annotated inline disable over adding entries.",
+        "findings": {f.key: f.message for f in findings},
+    }
+    Path(path).write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+# AST helpers shared by checkers -------------------------------------------
+
+def dotted_name(node) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def str_const(node) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

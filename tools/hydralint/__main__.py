@@ -1,0 +1,86 @@
+"""CLI: ``python -m tools.hydralint src/ tests/ [--baseline FILE]``.
+
+Exit codes: 0 clean (or fully baselined), 1 findings / baseline
+violations, 2 usage error.  Run from the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.hydralint import (all_checkers, load_baseline, run_lint,
+                             write_baseline)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.hydralint",
+        description="Repo-specific static analysis for the Hydra "
+                    "reproduction (see docs/development.md).")
+    parser.add_argument("paths", nargs="+",
+                        help="files or directories to lint (e.g. src/ tests/)")
+    parser.add_argument("--root", default=".",
+                        help="project root for relative paths and docs "
+                             "(default: current directory)")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline JSON of known findings; lint fails on "
+                             "findings not in it AND on stale entries "
+                             "(the baseline may only shrink)")
+    parser.add_argument("--write-baseline", default=None, metavar="FILE",
+                        help="write the current findings to FILE as the new "
+                             "baseline and exit 0")
+    parser.add_argument("--select", default=None,
+                        help="comma-separated checker codes to run "
+                             "(default: all)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit findings as JSON instead of text")
+    args = parser.parse_args(argv)
+
+    root = Path(args.root).resolve()
+    select = None
+    if args.select:
+        select = {c.strip() for c in args.select.split(",") if c.strip()}
+        known = {code for code, _ in all_checkers()}
+        bad = select - known - {"HL000"}
+        if bad:
+            parser.error(f"unknown checker code(s): {', '.join(sorted(bad))}")
+
+    result = run_lint(args.paths, root, select=select)
+
+    if args.write_baseline:
+        write_baseline(args.write_baseline, result.findings)
+        print(f"[hydralint] wrote {len(result.findings)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else {}
+    new = result.new_against(baseline)
+    stale = result.stale_baseline_keys(baseline)
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [vars(f) | {"key": f.key} for f in new],
+            "baselined": len(result.findings) - len(new),
+            "stale_baseline": stale,
+            "suppressed": len(result.suppressed),
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.render())
+        for k in stale:
+            print(f"baseline: stale entry {k!r} no longer matches any "
+                  f"finding — remove it (the baseline may only shrink)")
+        n_base = len(result.findings) - len(new)
+        if not new and not stale:
+            print(f"[hydralint] OK: {len(result.suppressed)} suppressed, "
+                  f"{n_base} baselined, 0 new")
+        else:
+            print(f"[hydralint] {len(new)} new finding(s), {len(stale)} "
+                  f"stale baseline entr(y/ies)", file=sys.stderr)
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,132 @@
+"""HL005 — gateway target-adapter conformance.
+
+The gateway fronts three duck-typed stacks through ``TargetAdapter``
+(``RuntimeTarget`` / ``PlatformTarget`` / ``ClusterTarget``).  Nothing
+but convention guarantees that the surface ``replay.py`` / ``recorder.py``
+/ ``gateway.py`` actually touch (``invoke``, ``sample``, ``counters``,
+``n_nodes``, ``platform_metrics``, ...) exists on every adapter — PR 5's
+``recorder.finish()`` n_nodes default bug was exactly this class of
+drift.
+
+The checker computes the *used* protocol surface — every attribute
+accessed on an expression named ``adapter`` / ``self.adapter`` inside
+the gateway package — and requires that:
+
+  * the ``TargetAdapter`` base defines every used name (method,
+    property, or class attribute), so the surface is discoverable in
+    one place; and
+  * every concrete subclass overrides each base method whose body is
+    just ``raise NotImplementedError`` (abstract-by-convention) that is
+    in the used surface.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.hydralint import Finding, Project, dotted_name
+
+CODE = "HL005"
+
+BASE_CLASS = "TargetAdapter"
+ADAPTER_FILE = "gateway/targets.py"
+GATEWAY_DIR = "gateway/"
+ADAPTER_NAMES = ("adapter", "self.adapter")
+
+
+def _used_surface(project: Project) -> dict:
+    """attr -> first (path, line) where gateway code touches adapter.attr."""
+    used = {}
+    for sf in project.files:
+        if GATEWAY_DIR not in sf.path:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            base = dotted_name(node.value)
+            if base in ADAPTER_NAMES:
+                used.setdefault(node.attr, (sf.path, node.lineno))
+    return used
+
+
+def _is_not_implemented(fn) -> bool:
+    body = [s for s in fn.body
+            if not (isinstance(s, ast.Expr)
+                    and isinstance(s.value, ast.Constant))]  # docstring
+    if len(body) != 1 or not isinstance(body[0], ast.Raise):
+        return False
+    exc = body[0].exc
+    name = dotted_name(exc.func if isinstance(exc, ast.Call) else exc)
+    return name == "NotImplementedError"
+
+
+def check(project: Project) -> list:
+    targets_sf = None
+    for sf in project.files:
+        if sf.path.endswith(ADAPTER_FILE):
+            targets_sf = sf
+            break
+    if targets_sf is None:
+        return []
+
+    base = None
+    subclasses = []
+    for node in ast.walk(targets_sf.tree):
+        if isinstance(node, ast.ClassDef):
+            if node.name == BASE_CLASS:
+                base = node
+            elif any(dotted_name(b) == BASE_CLASS for b in node.bases):
+                subclasses.append(node)
+    if base is None:
+        return []
+
+    def class_names(cls) -> dict:
+        """name -> def node (or None for plain attribute assignments)."""
+        names = {}
+        for stmt in cls.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                names[stmt.name] = stmt
+            elif isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        names[t.id] = None
+            elif isinstance(stmt, ast.AnnAssign) and isinstance(
+                    stmt.target, ast.Name):
+                names[stmt.target.id] = None
+        # instance attributes assigned in __init__
+        init = names.get("__init__")
+        if init is not None:
+            for sub in ast.walk(init):
+                if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                    tgts = sub.targets if isinstance(sub, ast.Assign) \
+                        else [sub.target]
+                    for t in tgts:
+                        n = dotted_name(t)
+                        if n and n.startswith("self.") and n.count(".") == 1:
+                            names[n.split(".", 1)[1]] = None
+        return names
+
+    findings = []
+    used = _used_surface(project)
+    base_names = class_names(base)
+
+    for attr, (path, line) in sorted(used.items()):
+        if attr not in base_names:
+            findings.append(Finding(
+                CODE, targets_sf.path, base.lineno, 0,
+                f"gateway code uses adapter.{attr} ({path}:{line}) but "
+                f"{BASE_CLASS} does not define it — the adapter protocol "
+                f"surface must be declared on the base",
+                f"base-missing:{attr}"))
+
+    abstract = {name for name, fn in base_names.items()
+                if fn is not None and _is_not_implemented(fn)}
+    for cls in subclasses:
+        sub_names = class_names(cls)
+        for attr in sorted(abstract & set(used)):
+            if attr not in sub_names:
+                findings.append(Finding(
+                    CODE, targets_sf.path, cls.lineno, 0,
+                    f"{cls.name} does not implement {attr}() — the base "
+                    f"raises NotImplementedError and the gateway calls it",
+                    f"unimplemented:{cls.name}.{attr}"))
+    return findings

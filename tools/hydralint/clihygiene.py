@@ -1,0 +1,47 @@
+"""HL007 — argparse hygiene.
+
+Every CLI flag must carry a non-empty ``help=`` string: the launchers
+(``repro.launch.serve``, ``benchmarks/bench_trace.py``) are the
+documented entry points and ``--help`` is their reference manual.
+Mutually-exclusive flag *combos* can't be checked statically in general
+— those are enforced by explicit ``parser.error`` calls and exercised
+in tests — but the missing-help case is purely syntactic and cheap.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.hydralint import Finding, Project, str_const
+
+CODE = "HL007"
+
+
+def check(project: Project) -> list:
+    findings = []
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "add_argument"
+                    and node.args):
+                continue
+            flag = str_const(node.args[0])
+            if flag is None:
+                continue
+            help_val = None
+            has_help = False
+            for kw in node.keywords:
+                if kw.arg == "help":
+                    has_help = True
+                    help_val = str_const(kw.value)
+            if not has_help:
+                findings.append(Finding(
+                    CODE, sf.path, node.lineno, node.col_offset,
+                    f"CLI flag {flag} has no help= string",
+                    f"no-help:{flag}"))
+            elif help_val is not None and not help_val.strip():
+                findings.append(Finding(
+                    CODE, sf.path, node.lineno, node.col_offset,
+                    f"CLI flag {flag} has an empty help= string",
+                    f"empty-help:{flag}"))
+    return findings

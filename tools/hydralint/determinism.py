@@ -1,0 +1,107 @@
+"""HL003 — sim determinism.
+
+The simulator's value rests on the golden-parity pin in
+``tests/test_sim.py``: identical trace + params => identical
+``SimResult``, bit for bit, across machines and runs.  Anything that
+couples the event loop to wall-clock time, unseeded randomness, or hash
+iteration order silently breaks that pin.
+
+Scope: files under ``core/sim/``, plus ``core/tracesim.py`` and
+``core/traces.py`` (path-matched), plus any file carrying a
+``# hydralint: sim-module`` marker (used by fixtures and future sim
+modules that live elsewhere).
+
+Flags:
+  * ``time.time`` / ``time.monotonic`` / ``time.perf_counter`` /
+    ``time.sleep`` calls;
+  * module-level ``random.*`` calls (unseeded global RNG);
+  * legacy ``np.random.<fn>`` calls (global RNG) and
+    ``np.random.default_rng()`` with no seed argument;
+  * ``for`` loops iterating directly over a set literal, set
+    comprehension, ``set(...)``, or ``frozenset(...)`` — set order is
+    hash-order and must not feed event scheduling.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.hydralint import Finding, Project, dotted_name
+from tools.hydralint.purity import _import_aliases
+
+CODE = "HL003"
+
+SIM_PATH_PARTS = ("core/sim/", "core/tracesim.py", "core/traces.py")
+TIME_FNS = {"time", "monotonic", "perf_counter", "sleep", "monotonic_ns",
+            "time_ns", "perf_counter_ns"}
+
+
+def _is_sim_file(sf) -> bool:
+    if any(part in sf.path for part in SIM_PATH_PARTS):
+        return True
+    return sf.has_marker("sim-module")
+
+
+def check(project: Project) -> list:
+    findings = []
+    for sf in project.files:
+        if not _is_sim_file(sf):
+            continue
+        aliases = _import_aliases(sf.tree)
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                findings.extend(_check_call(sf.path, node, aliases))
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                findings.extend(_check_for(sf.path, node))
+    return findings
+
+
+def _full_name(name: str, aliases: dict) -> str:
+    parts = name.split(".")
+    return ".".join([aliases.get(parts[0], parts[0])] + parts[1:])
+
+
+def _check_call(path: str, node: ast.Call, aliases: dict) -> list:
+    name = dotted_name(node.func)
+    if name is None:
+        return []
+    full = _full_name(name, aliases)
+    parts = full.split(".")
+    if parts[0] == "time" and len(parts) == 2 and parts[1] in TIME_FNS:
+        return [Finding(CODE, path, node.lineno, node.col_offset,
+                        f"wall-clock call {name}() in sim code — sim time "
+                        f"must come from the event queue",
+                        f"wallclock:{full}")]
+    if parts[0] == "random" and len(parts) == 2:
+        return [Finding(CODE, path, node.lineno, node.col_offset,
+                        f"global random.{parts[1]}() in sim code — use a "
+                        f"seeded np.random.default_rng(seed)",
+                        f"unseeded:{full}")]
+    if full.startswith("numpy.random.") or full.startswith("np.random."):
+        leaf = parts[-1]
+        if leaf in ("default_rng", "Generator", "SeedSequence"):
+            if leaf == "default_rng" and not node.args and not node.keywords:
+                return [Finding(CODE, path, node.lineno, node.col_offset,
+                                "np.random.default_rng() without a seed in "
+                                "sim code",
+                                "unseeded:default_rng")]
+            return []
+        return [Finding(CODE, path, node.lineno, node.col_offset,
+                        f"legacy global np.random.{leaf}() in sim code — "
+                        f"use a seeded np.random.default_rng(seed)",
+                        f"unseeded:np.random.{leaf}")]
+    return []
+
+
+def _check_for(path: str, node) -> list:
+    it = node.iter
+    is_set = isinstance(it, (ast.Set, ast.SetComp))
+    if isinstance(it, ast.Call):
+        name = dotted_name(it.func)
+        if name in ("set", "frozenset"):
+            is_set = True
+    if not is_set:
+        return []
+    return [Finding(CODE, path, node.lineno, node.col_offset,
+                    "iteration over a set in sim code — set order is "
+                    "hash-order; sort it before it can feed event scheduling",
+                    f"set-iter:L{node.lineno}")]

@@ -1,0 +1,267 @@
+"""HL001 — lock discipline.
+
+History: the ``Metrics`` histogram defaultdict race and the
+``HydraPlatform`` optimistic-admission race (PR 4) were both the same
+shape — an attribute written under ``self._lock`` in one method and
+touched without it in another.
+
+Two sub-rules, both per-class and purely syntactic:
+
+  (a) *Mixed guarded access.*  If ``self._x`` is ever **written** inside
+      a ``with self._lock:`` block (outside ``__init__``), then every
+      read or write of ``self._x`` outside ``__init__`` must also hold
+      that lock.  ``threading.Condition(self._lock)`` aliases to the
+      same lock, and a private helper whose every in-class call site
+      holds the lock is itself treated as lock-held (the documented
+      "caller holds the lock" pattern, e.g. ``Gateway._next_request``).
+
+  (b) *Unguarded read-modify-write in thread-owning classes.*  A class
+      that spawns its own ``threading.Thread`` shares its attributes
+      across threads by construction; ``self.x += 1`` outside any lock
+      is a lost-update bug there even for "just a counter"
+      (``Autoscaler.resizes`` / ``ClusterBalancer`` tick counters).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.hydralint import Finding, Project, dotted_name
+
+CODE = "HL001"
+
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore",
+                   "BoundedSemaphore"}
+
+
+def _lock_factory_name(call: ast.Call) -> Optional[str]:
+    name = dotted_name(call.func)
+    if name is None:
+        return None
+    base = name.split(".")[-1]
+    return base if base in _LOCK_FACTORIES else None
+
+
+class _ClassModel:
+    """Lock attrs + every self-attr access site of one class."""
+
+    def __init__(self, cls: ast.ClassDef):
+        self.cls = cls
+        self.lock_attrs: dict = {}     # attr -> canonical lock group name
+        self.accesses: list = []       # (attr, method, line, col, write, aug, locked_groups)
+        self.method_calls: dict = {}   # method -> [(callee, locked_groups)]
+        self.methods: set = set()
+        self.spawns_threads = False
+
+    def group_of(self, attr: str) -> Optional[str]:
+        return self.lock_attrs.get(attr)
+
+
+def _collect_class(cls: ast.ClassDef) -> _ClassModel:
+    model = _ClassModel(cls)
+
+    # Pass 1: lock attributes (any method; normally __init__), with
+    # Condition(self._lock) aliased to the wrapped lock's group.
+    pending_alias = {}
+    for node in ast.walk(cls):
+        if not (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)):
+            continue
+        fac = _lock_factory_name(node.value)
+        if fac is None:
+            continue
+        for tgt in node.targets:
+            name = dotted_name(tgt)
+            if not (name and name.startswith("self.") and name.count(".") == 1):
+                continue
+            attr = name.split(".", 1)[1]
+            alias_of = None
+            if fac == "Condition" and node.value.args:
+                arg = dotted_name(node.value.args[0])
+                if arg and arg.startswith("self."):
+                    alias_of = arg.split(".", 1)[1]
+            if alias_of is not None:
+                pending_alias[attr] = alias_of
+            else:
+                model.lock_attrs[attr] = attr
+    for attr, target in pending_alias.items():
+        model.lock_attrs[attr] = model.lock_attrs.get(target, target)
+
+    # Pass 2: per-method walk tracking which lock groups are held.
+    for stmt in cls.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            model.methods.add(stmt.name)
+            _walk_method(model, stmt)
+    return model
+
+
+def _with_lock_groups(model: _ClassModel, node: ast.With) -> set:
+    groups = set()
+    for item in node.items:
+        expr = item.context_expr
+        if isinstance(expr, ast.Call):   # e.g. self._lock.acquire() style: skip
+            continue
+        name = dotted_name(expr)
+        if name and name.startswith("self.") and name.count(".") == 1:
+            attr = name.split(".", 1)[1]
+            grp = model.group_of(attr)
+            if grp:
+                groups.add(grp)
+    return groups
+
+
+_MUTATORS = {"append", "extend", "add", "update", "clear", "pop", "popitem",
+             "remove", "discard", "insert", "setdefault", "appendleft"}
+
+
+def _self_attr_of_container_write(node):
+    """'x' when ``node`` mutates ``self.x`` through its container API:
+    ``self.x[k] = v`` / ``del self.x[k]`` / ``self.x.append(...)``."""
+    if isinstance(node, (ast.Assign, ast.AugAssign)):
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        for tgt in targets:
+            if isinstance(tgt, ast.Subscript):
+                name = dotted_name(tgt.value)
+                if name and name.startswith("self.") and name.count(".") == 1:
+                    return name.split(".", 1)[1]
+    if isinstance(node, ast.Delete):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript):
+                name = dotted_name(tgt.value)
+                if name and name.startswith("self.") and name.count(".") == 1:
+                    return name.split(".", 1)[1]
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in _MUTATORS:
+        name = dotted_name(node.func.value)
+        if name and name.startswith("self.") and name.count(".") == 1:
+            return name.split(".", 1)[1]
+    return None
+
+
+def _walk_method(model: _ClassModel, method) -> None:
+    mname = method.name
+
+    def visit(node, held: frozenset):
+        if isinstance(node, ast.With):
+            held = held | _with_lock_groups(model, node)
+            for child in node.body:
+                visit(child, held)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)) \
+                and node is not method:
+            # Nested defs/lambdas may run on another thread; analyze their
+            # bodies as holding nothing.
+            held = frozenset()
+        if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+                and node.value.id == "self":
+            write = isinstance(node.ctx, (ast.Store, ast.Del))
+            model.accesses.append((node.attr, mname, node.lineno,
+                                   node.col_offset, write, False, held))
+        if isinstance(node, ast.AugAssign):
+            name = dotted_name(node.target)
+            if name and name.startswith("self.") and name.count(".") == 1:
+                attr = name.split(".", 1)[1]
+                model.accesses.append((attr, mname, node.lineno,
+                                       node.col_offset, True, True, held))
+        cw = _self_attr_of_container_write(node)
+        if cw is not None:
+            model.accesses.append((cw, mname, node.lineno,
+                                   node.col_offset, True, False, held))
+        if isinstance(node, ast.Call):
+            cname = dotted_name(node.func)
+            if cname and cname.startswith("self.") and cname.count(".") == 1:
+                model.method_calls.setdefault(cname.split(".", 1)[1], []).append(
+                    (mname, held))
+            if cname and cname.split(".")[-1] == "Thread":
+                model.spawns_threads = True
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for child in method.body:
+        visit(child, frozenset())
+
+
+def _lock_held_methods(model: _ClassModel) -> dict:
+    """Fixpoint: private methods whose every in-class call site holds
+    group G are treated as executing with G held ("caller holds the
+    lock" helpers). Returns method -> frozenset(groups)."""
+    held = {m: frozenset() for m in model.methods}
+    changed = True
+    while changed:
+        changed = False
+        for m in model.methods:
+            if not m.startswith("_") or m in ("__init__", "__enter__", "__exit__"):
+                continue
+            sites = model.method_calls.get(m)
+            if not sites:
+                continue
+            common = None
+            for caller, site_held in sites:
+                eff = site_held | held.get(caller, frozenset())
+                common = eff if common is None else (common & eff)
+            common = frozenset(common or ())
+            if common and common != held[m]:
+                held[m] = common
+                changed = True
+    return held
+
+
+def check(project: Project) -> list:
+    findings = []
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                findings.extend(_check_class(sf.path, node))
+    return findings
+
+
+def _check_class(path: str, cls: ast.ClassDef) -> list:
+    model = _collect_class(cls)
+    out = []
+    if not model.lock_attrs and not model.spawns_threads:
+        return out
+    extra_held = _lock_held_methods(model)
+
+    # Rule (a): attrs written under a lock somewhere must always be
+    # accessed under that lock.  Underscore attrs only — public attrs
+    # are part of a cross-object surface the class can't police.
+    guarded: dict = {}
+    for attr, method, _ln, _col, write, _aug, held in model.accesses:
+        eff = held | extra_held.get(method, frozenset())
+        if write and method != "__init__" and attr.startswith("_") and eff:
+            if model.group_of(attr):     # the lock objects themselves
+                continue
+            guarded.setdefault(attr, set()).update(eff)
+    reported = set()
+    for attr, method, ln, col, _write, _aug, held in model.accesses:
+        if attr not in guarded or method == "__init__":
+            continue
+        eff = held | extra_held.get(method, frozenset())
+        need = guarded[attr]
+        if not (eff & need) and (method, attr) not in reported:
+            reported.add((method, attr))
+            lock = sorted(need)[0]
+            out.append(Finding(
+                CODE, path, ln, col,
+                f"{cls.name}.{attr} is written under self.{lock} but accessed "
+                f"in {method}() without it",
+                f"{cls.name}.{method}:{attr}"))
+
+    # Rule (b): read-modify-write outside any lock in a thread-owning class.
+    if model.spawns_threads:
+        seen = set()
+        for attr, method, ln, col, _write, aug, held in model.accesses:
+            if not aug or method == "__init__":
+                continue
+            eff = held | extra_held.get(method, frozenset())
+            if eff or attr in guarded:
+                continue     # guarded ones already handled by rule (a)
+            k = (method, attr)
+            if k in seen:
+                continue
+            seen.add(k)
+            out.append(Finding(
+                CODE, path, ln, col,
+                f"{cls.name}.{attr} += ... in {method}() without a lock, but "
+                f"{cls.name} spawns threads (lost-update race)",
+                f"{cls.name}.{method}:{attr}:rmw"))
+    return out

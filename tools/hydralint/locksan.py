@@ -1,0 +1,280 @@
+"""Runtime lock-order sanitizer (the dynamic half of hydralint).
+
+Static HL001 proves attributes stay under their lock; it cannot prove
+that two locks are always taken in the same ORDER.  With the platform
+lock, per-record place locks, per-object metrics locks, and the cluster
+condition all nesting on the request path, an A->B in one thread and
+B->A in another is a deadlock waiting for load.  This module wraps
+``threading.Lock`` / ``threading.RLock`` to record the acquisition-order
+graph while the hammer tests run, then fails the test if the graph
+contains a cycle — lockdep, in miniature.
+
+Usage (armed in the tier-1 hammer tests)::
+
+    from tools.hydralint import locksan
+
+    with locksan.sanitized():      # patches threading.Lock/RLock,
+        run_concurrent_workload()  # records order edges, checks at exit
+
+Notes on fidelity:
+
+  * Order is recorded *before* blocking on the inner acquire, so an
+    ordering that would deadlock is still captured.
+  * Re-entrant RLock acquires add no edge (no new ordering).
+  * A plain Lock acquired twice by one thread, or released by a thread
+    that never acquired it, is being used as a semaphore/handoff (e.g.
+    ``Condition`` waiter locks) — ordering analysis does not apply to
+    those, so they are excluded from the cycle check instead of
+    producing false inversions.
+"""
+from __future__ import annotations
+
+import _thread
+import contextlib
+import sys
+import threading
+
+__all__ = ["LockOrderSanitizer", "sanitized", "LockOrderViolation"]
+
+
+class LockOrderViolation(AssertionError):
+    pass
+
+
+def _call_site() -> str:
+    """file:line of the nearest frame outside this module."""
+    f = sys._getframe(2)
+    while f is not None and f.f_code.co_filename == __file__:
+        f = f.f_back
+    if f is None:
+        return "?"
+    return f"{f.f_code.co_filename.rsplit('/', 1)[-1]}:{f.f_lineno}"
+
+
+class _SanLockBase:
+    _reentrant = False
+
+    def __init__(self, san: "LockOrderSanitizer", inner, name: str):
+        self._san = san
+        self._inner = inner
+        self._lockid = san._register(self, name)
+
+    # -- tracking ----------------------------------------------------------
+    def _before_acquire(self) -> None:
+        self._san._on_acquire_attempt(self)
+
+    def _after_acquire(self) -> None:
+        self._san._on_acquired(self)
+
+    def _on_release(self) -> None:
+        self._san._on_release(self)
+
+    # -- lock API ----------------------------------------------------------
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        self._before_acquire()
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._after_acquire()
+        return got
+
+    def release(self):
+        self._on_release()
+        return self._inner.release()
+
+    def locked(self):
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self._san.name_of(self._lockid)!r}>"
+
+
+class _SanLock(_SanLockBase):
+    pass
+
+
+class _SanRLock(_SanLockBase):
+    _reentrant = True
+
+    # Condition() duck-types on these three for RLocks.
+    def _is_owned(self):
+        return self._inner._is_owned()
+
+    def _release_save(self):
+        self._san._on_release(self, all_depths=True)
+        return self._inner._release_save()
+
+    def _acquire_restore(self, state):
+        self._inner._acquire_restore(state)
+        self._san._on_acquired(self)
+
+
+class LockOrderSanitizer:
+    """Acquisition-order graph over every lock created while patched."""
+
+    def __init__(self):
+        self._meta = _thread.allocate_lock()   # raw: never wrapped
+        self._orig_lock = threading.Lock
+        self._orig_rlock = threading.RLock
+        self._next_id = 0
+        self._names: dict = {}                 # id -> name
+        self._edges: dict = {}                 # (a, b) -> "site" of first sight
+        self._excluded: set = set()            # semaphore-style lock ids
+        self._held = threading.local()
+        self.locks_created = 0
+        self.acquires = 0
+
+    # -- wrapper plumbing --------------------------------------------------
+    def _register(self, lock, name: str) -> int:
+        with self._meta:
+            lid = self._next_id
+            self._next_id += 1
+            self._names[lid] = name
+            self.locks_created += 1
+        return lid
+
+    def name_of(self, lid: int) -> str:
+        return self._names.get(lid, f"lock#{lid}")
+
+    def _stack(self) -> list:
+        st = getattr(self._held, "stack", None)
+        if st is None:
+            st = self._held.stack = []
+        return st
+
+    def _on_acquire_attempt(self, lock: _SanLockBase) -> None:
+        st = self._stack()
+        lid = lock._lockid
+        if lid in st:
+            if not lock._reentrant:
+                # double-acquire of a plain Lock by one thread: it's a
+                # handoff primitive, not a mutex — exclude from ordering
+                with self._meta:
+                    self._excluded.add(lid)
+            return      # re-entrant: no new ordering information
+        if st:
+            site = _call_site()
+            with self._meta:
+                self.acquires += 1
+                for held in st:
+                    if held != lid:
+                        self._edges.setdefault((held, lid), site)
+        else:
+            with self._meta:
+                self.acquires += 1
+
+    def _on_acquired(self, lock: _SanLockBase) -> None:
+        self._stack().append(lock._lockid)
+
+    def _on_release(self, lock: _SanLockBase, all_depths: bool = False) -> None:
+        st = self._stack()
+        lid = lock._lockid
+        if lid not in st:
+            # released by a thread that never acquired it: handoff usage
+            with self._meta:
+                self._excluded.add(lid)
+            return
+        if all_depths:
+            while lid in st:
+                st.remove(lid)
+        else:
+            # remove the innermost occurrence
+            for i in range(len(st) - 1, -1, -1):
+                if st[i] == lid:
+                    del st[i]
+                    break
+
+    # -- factories ---------------------------------------------------------
+    def make_lock(self, name: str = "") -> _SanLock:
+        return _SanLock(self, self._orig_lock(),
+                        name or f"Lock@{_call_site()}")
+
+    def make_rlock(self, name: str = "") -> _SanRLock:
+        return _SanRLock(self, self._orig_rlock(),
+                         name or f"RLock@{_call_site()}")
+
+    @contextlib.contextmanager
+    def patched(self):
+        """Swap ``threading.Lock``/``RLock`` (and ``queue``'s references)
+        for sanitized factories."""
+        orig_lock, orig_rlock = threading.Lock, threading.RLock
+        threading.Lock = self.make_lock
+        threading.RLock = self.make_rlock
+        try:
+            yield self
+        finally:
+            threading.Lock = orig_lock
+            threading.RLock = orig_rlock
+
+    # -- analysis ----------------------------------------------------------
+    def order_graph(self) -> dict:
+        """adjacency: lock id -> set of lock ids acquired while holding it
+        (handoff-style locks excluded)."""
+        with self._meta:
+            edges = dict(self._edges)
+            excluded = set(self._excluded)
+        adj: dict = {}
+        for (a, b) in edges:
+            if a in excluded or b in excluded:
+                continue
+            adj.setdefault(a, set()).add(b)
+        return adj
+
+    def check(self) -> list:
+        """Human-readable lock-order inversion reports (empty = clean)."""
+        adj = self.order_graph()
+        with self._meta:
+            edges = dict(self._edges)
+
+        def reachable(src, dst) -> bool:
+            seen, todo = set(), [src]
+            while todo:
+                n = todo.pop()
+                if n == dst:
+                    return True
+                if n in seen:
+                    continue
+                seen.add(n)
+                todo.extend(adj.get(n, ()))
+            return False
+
+        out = []
+        reported = set()
+        for (a, b) in sorted(edges):
+            if b not in adj.get(a, ()):   # excluded edge
+                continue
+            pair = (min(a, b), max(a, b))
+            if pair in reported:
+                continue
+            if reachable(b, a):
+                reported.add(pair)
+                site_ab = edges.get((a, b), "?")
+                site_ba = edges.get((b, a), "?")
+                out.append(
+                    f"lock-order inversion: {self.name_of(a)} -> "
+                    f"{self.name_of(b)} (at {site_ab}) but also "
+                    f"{self.name_of(b)} ->* {self.name_of(a)} "
+                    f"(e.g. at {site_ba})")
+        return out
+
+    def assert_clean(self) -> None:
+        violations = self.check()
+        if violations:
+            raise LockOrderViolation(
+                "lock-order inversions detected:\n" + "\n".join(violations))
+
+
+@contextlib.contextmanager
+def sanitized():
+    """Patch lock factories, run the body, fail on order inversions."""
+    san = LockOrderSanitizer()
+    with san.patched():
+        yield san
+    san.assert_clean()

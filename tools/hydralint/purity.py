@@ -1,0 +1,198 @@
+"""HL002 — hot-path purity.
+
+History: PR 4 shipped ``jnp.zeros`` arena factories that compiled a fill
+kernel per size, and PR 5 found ``workload.args_for`` building payloads
+with eager ``jnp.full`` — throttling the open-loop replay ~2.3x until it
+was moved to host ``np`` arrays.  The request path must not create
+device arrays, trigger XLA compilation, sleep, or touch the filesystem.
+
+The checker builds a name-resolved call graph from the request-path
+roots (gateway admission + worker loop, ``HydraRuntime.invoke`` /
+``_do_invoke``, ``TraceWorkload.args_for``, the arena claim path, the
+platform/cluster invoke entries) and flags banned calls in any function
+reachable from them.  Resolution is deliberately over-approximate
+(attribute calls match every project method of that name) but skips
+attributes rooted at imported modules (``np.full`` never resolves into
+the project) and very common container-method names.
+
+Extra roots can be declared with a ``# hydralint: hot-path-root`` marker
+on the ``def`` line.  A scoped ``# hydralint: disable=HL002`` on a def
+both silences the body and stops traversal through it — used where the
+"impurity" is a modeled cost (registration, lazy restore).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.hydralint import Finding, Project, dotted_name
+
+CODE = "HL002"
+
+ROOTS = {
+    "Gateway.submit",
+    "Gateway._worker_loop",
+    "Gateway._serve",
+    "HydraRuntime.invoke",
+    "HydraRuntime._do_invoke",
+    "TraceWorkload.args_for",
+    "ArenaPool.acquire",
+    "HydraPlatform.invoke",
+    "HydraCluster.invoke",
+}
+
+JNP_CONSTRUCTORS = {
+    "zeros", "ones", "full", "empty", "array", "asarray", "arange",
+    "linspace", "eye", "zeros_like", "ones_like", "full_like", "identity",
+}
+COMPILE_TRIGGERS = {"jit", "pjit", "pmap", "xla_computation"}
+FILE_IO_METHODS = {"read_text", "write_text", "read_bytes", "write_bytes",
+                   "unlink", "mkdir", "glob", "rglob"}
+# Container/str methods too generic to resolve through the project.
+RESOLVE_STOPLIST = {
+    "get", "put", "pop", "append", "extend", "items", "keys", "values",
+    "join", "split", "read", "write", "close", "update", "add", "copy",
+    "sort", "setdefault", "format", "strip", "startswith", "endswith",
+    "encode", "decode", "discard", "remove", "clear", "count", "index",
+    "wait", "notify", "notify_all", "set", "is_set", "start",
+}
+
+
+def _import_aliases(tree: ast.Module) -> dict:
+    """alias -> full dotted module path, for every import in the file."""
+    aliases = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases.setdefault(a.asname or a.name,
+                                   f"{node.module}.{a.name}")
+    return aliases
+
+
+def _banned(call: ast.Call, aliases: dict) -> Optional[str]:
+    """Return a human label if this call is banned on the hot path."""
+    name = dotted_name(call.func)
+    if name is None:
+        return None
+    parts = name.split(".")
+    full = ".".join([aliases.get(parts[0], parts[0])] + parts[1:])
+    if full == "time.sleep":
+        return "time.sleep"
+    if full == "builtins.open" or name == "open":
+        return "open() file I/O"
+    if full.startswith("jax.numpy.") and parts[-1] in JNP_CONSTRUCTORS:
+        return f"eager jnp.{parts[-1]} device-array construction"
+    if full.startswith("jax.") and parts[-1] in COMPILE_TRIGGERS:
+        return f"jax.{parts[-1]} compile trigger"
+    if len(parts) > 1 and parts[-1] in FILE_IO_METHODS \
+            and aliases.get(parts[0], "").startswith(("pathlib", "os")):
+        return f"blocking file I/O ({name})"
+    return None
+
+
+class _Graph:
+    def __init__(self, project: Project):
+        self.project = project
+        self.by_qualname = {}     # (path, qualname) -> (SourceFile, FuncInfo)
+        self.by_method = {}       # method name -> [(path, qualname)]
+        self.classes = {}         # class name -> [(path, "Cls.__init__")]
+        self.aliases = {}         # path -> import aliases
+        for sf, fi in project.iter_funcs():
+            self.by_qualname[(sf.path, fi.qualname)] = (sf, fi)
+            leaf = fi.qualname.rsplit(".", 1)[-1]
+            self.by_method.setdefault(leaf, []).append((sf.path, fi.qualname))
+        for sf in project.files:
+            self.aliases[sf.path] = _import_aliases(sf.tree)
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.ClassDef):
+                    for stmt in node.body:
+                        if isinstance(stmt, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)) \
+                                and stmt.name == "__init__":
+                            self.classes.setdefault(node.name, []).append(
+                                (sf.path, f"{node.name}.__init__"))
+
+    def edges(self, path: str, fi) -> set:
+        """Resolve every call in ``fi`` to project (path, qualname) targets."""
+        out = set()
+        aliases = self.aliases[path]
+        for node in ast.walk(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            parts = name.split(".")
+            if len(parts) == 1:
+                leaf = parts[0]
+                if leaf in aliases and "." in aliases[leaf]:
+                    leaf = aliases[leaf].rsplit(".", 1)[-1]
+                key = (path, leaf)
+                if key in self.by_qualname:
+                    out.add(key)
+                out.update(self.classes.get(leaf, ()))
+                # module-level func of same name elsewhere (from-imports)
+                for tgt in self.by_method.get(leaf, ()):
+                    if "." not in tgt[1]:
+                        out.add(tgt)
+            else:
+                if parts[0] in aliases and parts[0] not in ("self", "cls"):
+                    continue      # rooted at an imported module: not ours
+                leaf = parts[-1]
+                if leaf in RESOLVE_STOPLIST:
+                    continue
+                for tgt in self.by_method.get(leaf, ()):
+                    if "." in tgt[1]:       # methods only for attr calls
+                        out.add(tgt)
+        return out
+
+
+def check(project: Project) -> list:
+    graph = _Graph(project)
+    cut = project.scope_suppressed_qualnames(CODE)
+
+    roots = []
+    for sf, fi in project.iter_funcs():
+        if fi.qualname in ROOTS:
+            roots.append((sf.path, fi.qualname))
+            continue
+        node = fi.node
+        body_start = node.body[0].lineno if node.body else node.lineno
+        sig = set(range(node.lineno, max(node.lineno, body_start - 1) + 1))
+        if sig & sf.marker_lines("hot-path-root"):
+            roots.append((sf.path, fi.qualname))
+
+    findings, visited, order = [], set(), list()
+    came_from = {}
+    queue = [r for r in roots if r not in cut]
+    visited.update(queue)
+    while queue:
+        key = queue.pop(0)
+        order.append(key)
+        sf, fi = graph.by_qualname[key]
+        aliases = graph.aliases[key[0]]
+        counts = {}
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Call):
+                label = _banned(node, aliases)
+                if label:
+                    i = counts.get(label, 0)
+                    counts[label] = i + 1
+                    root = key
+                    while root in came_from:
+                        root = came_from[root]
+                    findings.append(Finding(
+                        CODE, key[0], node.lineno, node.col_offset,
+                        f"{label} in {fi.qualname}() on the request hot path "
+                        f"(reachable from {root[1]})",
+                        f"{fi.qualname}:{label}:{i}"))
+        for tgt in graph.edges(key[0], fi):
+            if tgt in visited or tgt in cut:
+                continue
+            visited.add(tgt)
+            came_from[tgt] = key
+            queue.append(tgt)
+    return findings

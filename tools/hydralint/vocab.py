@@ -1,0 +1,210 @@
+"""HL004 — metric-vocabulary drift.
+
+History: PR 5's calibration round trip works only because every live
+metric the sim needs appears in the mapping layer (``gateway/targets``,
+``gateway/recorder``, ``gateway/replay``, ``core/calibrate``); a new
+live metric that never reaches that layer silently weakens
+``validate --round-trip`` (the live run records it, the ``SimResult``
+diff can't see it).  This checker makes the drift fail lint instead.
+
+Three sub-checks:
+
+  * every metric-name literal emitted through ``Metrics``
+    (``.inc/.observe/.hist/.timeit`` on a ``metrics`` receiver) in the
+    live stack must appear in a mapping-layer module or in the
+    ``INTERNAL_DIAGNOSTICS`` allowlist below (each entry justified);
+  * every counter name the mapping layer reads (``<...>.counters.get``
+    / ``.hist("...")`` / the ``*_COSTS`` tuples) must be emitted
+    somewhere — a read nobody writes is a typo;
+  * the duck-typed ``counters()`` implementations in
+    ``gateway/targets.py`` must all return the same literal key set
+    (the SimResult-facing vocabulary must not fork per adapter).
+
+A new metric is introduced by adding it to the mapping layer (preferred
+— wire it into ``replay_trace`` extras or the recorder) or, for a
+genuinely internal diagnostic, to ``INTERNAL_DIAGNOSTICS`` with a
+one-line justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.hydralint import Finding, Project, dotted_name, str_const
+
+CODE = "HL004"
+
+EMIT_METHODS = {"inc", "observe", "hist", "timeit"}
+
+# Files whose string literals count as "visible to the sim mapping".
+MAP_FILES = ("gateway/targets.py", "gateway/recorder.py",
+             "gateway/replay.py", "core/calibrate.py", "launch/serve.py")
+
+# Files that emit live metrics (the live stack; the sim keeps its own
+# SimResult schema and is exempt).
+EMIT_EXCLUDE = ("core/sim/", "tests/", "tools/")
+
+# Live metrics that deliberately have no SimResult counterpart.  Keep
+# each entry justified; prefer mapping over growing this list.
+INTERNAL_DIAGNOSTICS = {
+    "registered": "registration tally; trace replays derive it from the workload",
+    "deregistered": "teardown tally; no sim analog (sim never deregisters)",
+    "invoke_latency_s": "per-runtime wall latency; gateway records trace-time latency itself",
+    "runtime.boots": "counts prewarm + request-path boots; pool.miss is the mapped request-path subset",
+    "pool.return": "pool hygiene detail; sim models pool occupancy, not handbacks",
+    "pool.shrink": "autoscaler shrink detail; resize effects show up in mem/pool samples",
+    "place.colocated": "placement-mix diagnostic; sim has no placement-kind counter",
+    "place.spill": "placement-mix diagnostic; sim has no placement-kind counter",
+    "arena.evicted": "isolate TTL evictions; SimResult tracks runtime-level eviction only",
+    "snapshot_s": "snapshot cost is off the request path; sim models restore cost only",
+    "snapshots": "snapshot lifecycle tally; see snapshot_s",
+    "evictions": "snapshot-eviction tally; runtime.shutdowns is the mapped eviction signal",
+    "restores": "restore tally; restore_s (mapped) carries the calibratable cost",
+    "exports": "cross-node export tally; migrations (mapped) is the round-trip signal",
+    "imports": "cross-node import tally; migrations (mapped) is the round-trip signal",
+}
+
+
+def _receiver_is_metrics(func: ast.Attribute) -> bool:
+    name = dotted_name(func.value)
+    return bool(name) and (name == "metrics" or name.endswith(".metrics"))
+
+
+def _emitted(project: Project) -> dict:
+    """metric name -> first (path, line, col) emission site."""
+    out = {}
+    for sf in project.files:
+        if not sf.path.startswith("src/") or \
+                any(part in sf.path for part in EMIT_EXCLUDE):
+            continue
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in EMIT_METHODS
+                    and _receiver_is_metrics(node.func)
+                    and node.args):
+                continue
+            name = str_const(node.args[0])
+            if name is not None:
+                out.setdefault(name, (sf.path, node.lineno, node.col_offset))
+    return out
+
+
+def _mapping_literals(project: Project) -> set:
+    out = set()
+    for sf in project.files:
+        if not sf.path.endswith(MAP_FILES):
+            continue
+        for node in ast.walk(sf.tree):
+            s = str_const(node)
+            if s is not None:
+                out.add(s)
+    return out
+
+
+def _consumed(project: Project) -> dict:
+    """counter/hist names the mapping layer reads -> first site."""
+    out = {}
+    for sf in project.files:
+        if not sf.path.endswith(MAP_FILES):
+            continue
+        counter_vars = set()
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                tname = node.targets[0].id
+                vname = dotted_name(node.value)
+                if vname and vname.endswith(".counters"):
+                    counter_vars.add(tname)
+                if tname.endswith("_COSTS") and isinstance(
+                        node.value, (ast.Tuple, ast.List)):
+                    for elt in node.value.elts:
+                        s = str_const(elt)
+                        if s is not None:
+                            out.setdefault(s, (sf.path, elt.lineno,
+                                               elt.col_offset))
+                if tname == "LIVE_TO_MEASURED" and isinstance(
+                        node.value, ast.Dict):
+                    for k in node.value.keys:
+                        s = str_const(k)
+                        if s is not None:
+                            out.setdefault(s, (sf.path, k.lineno,
+                                               k.col_offset))
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute) and node.args):
+                continue
+            s = str_const(node.args[0])
+            if s is None:
+                continue
+            recv = dotted_name(node.func.value)
+            if node.func.attr == "get" and recv and (
+                    recv.endswith(".counters") or recv in counter_vars):
+                out.setdefault(s, (sf.path, node.lineno, node.col_offset))
+            elif node.func.attr == "hist" and recv and (
+                    recv == "metrics" or recv.endswith(".metrics")
+                    or recv.endswith("m")):
+                out.setdefault(s, (sf.path, node.lineno, node.col_offset))
+    return out
+
+
+def _counters_key_sets(project: Project) -> list:
+    """(class, path, line, frozenset(keys)) for each targets.py
+    ``counters()`` returning a dict literal."""
+    out = []
+    for sf in project.files:
+        if not sf.path.endswith("gateway/targets.py"):
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for stmt in node.body:
+                if not (isinstance(stmt, ast.FunctionDef)
+                        and stmt.name == "counters"):
+                    continue
+                for ret in ast.walk(stmt):
+                    if isinstance(ret, ast.Return) \
+                            and isinstance(ret.value, ast.Dict):
+                        keys = frozenset(
+                            s for k in ret.value.keys
+                            if (s := str_const(k)) is not None)
+                        out.append((node.name, sf.path, stmt.lineno, keys))
+    return out
+
+
+def check(project: Project) -> list:
+    findings = []
+    emitted = _emitted(project)
+    mapped = _mapping_literals(project)
+
+    for name, (path, line, col) in sorted(emitted.items()):
+        if name in mapped or name in INTERNAL_DIAGNOSTICS:
+            continue
+        findings.append(Finding(
+            CODE, path, line, col,
+            f"live metric \"{name}\" is never seen by the sim mapping layer "
+            f"({'/'.join(MAP_FILES)}) — wire it into the SimResult extras "
+            f"or add a justified INTERNAL_DIAGNOSTICS entry",
+            f"unmapped:{name}"))
+
+    for name, (path, line, col) in sorted(_consumed(project).items()):
+        if name not in emitted:
+            findings.append(Finding(
+                CODE, path, line, col,
+                f"mapping layer reads metric \"{name}\" that nothing in the "
+                f"live stack emits (typo or dead mapping)",
+                f"phantom:{name}"))
+
+    key_sets = _counters_key_sets(project)
+    concrete = [ks for ks in key_sets if ks[3]]
+    if concrete:
+        union = frozenset().union(*[ks[3] for ks in concrete])
+        for cls, path, line, keys in concrete:
+            missing = union - keys
+            if missing:
+                findings.append(Finding(
+                    CODE, path, line, 0,
+                    f"{cls}.counters() omits {sorted(missing)} — the "
+                    f"SimResult-facing counter vocabulary must match across "
+                    f"adapters",
+                    f"counters-parity:{cls}"))
+    return findings
