@@ -77,19 +77,29 @@ AZURE_SAMPLE = os.path.join(DATA_DIR, "azure_sample.csv")
 
 def load_trace_file(path: str, durations: str = None, memory: str = None,
                     target_rps: float = None, max_minutes: int = None,
-                    seed: int = 0) -> Trace:
+                    seed: int = 0, stream: bool = False,
+                    top_k: int = None, select: str = "top"):
     """Load an Azure-format trace; sibling ``<stem>_durations.csv`` /
-    ``<stem>_memory.csv`` tables are auto-discovered when not given."""
+    ``<stem>_memory.csv`` tables are auto-discovered when not given.
+    ``stream=True`` returns the lazily-expanded ``StreamingTrace``
+    (identical invocations, bounded memory — required for ``top_k``
+    selection); the default materializes a ``Trace``."""
     found = discover_azure_tables(path)
     durations = durations or found.get("durations_csv")
     memory = memory or found.get("memory_csv")
+    if stream or top_k is not None:
+        return Trace.stream_azure(path, durations_csv=durations,
+                                  memory_csv=memory, target_rps=target_rps,
+                                  max_minutes=max_minutes, seed=seed,
+                                  top_k=top_k, select=select)
     return Trace.from_azure(path, durations_csv=durations,
                             memory_csv=memory, target_rps=target_rps,
                             max_minutes=max_minutes, seed=seed)
 
 
-def azure_rows(trace: Trace, params: SimParams, models=None) -> list:
-    """Replay an Azure-format trace across ``models`` (default: all)."""
+def azure_rows(trace, params: SimParams, models=None) -> list:
+    """Replay an Azure-format trace (materialized or streaming) across
+    ``models`` (default: all)."""
     res = compare(trace, params, models=models)
     d = trace.describe()
     rows = [{
@@ -300,7 +310,8 @@ def live_rows(trace_file: str = AZURE_SAMPLE, compress: float = 120.0,
 def azure_section(trace_file: str, calibration: str = None,
                   durations: str = None, memory: str = None,
                   target_rps: float = None, max_minutes: int = None,
-                  seed: int = 0, models=None) -> list:
+                  seed: int = 0, models=None, stream: bool = False,
+                  top_k: int = None, select: str = "top") -> list:
     """One azure-replay section: fleet-pressure params (optionally
     calibrated), trace load, rows — shared by run() and the CLI."""
     params = SimParams(**AZURE_PARAMS)
@@ -308,7 +319,8 @@ def azure_section(trace_file: str, calibration: str = None,
         params = apply_calibration(params, calibration)
     trace = load_trace_file(trace_file, durations=durations, memory=memory,
                             target_rps=target_rps, max_minutes=max_minutes,
-                            seed=seed)
+                            seed=seed, stream=stream, top_k=top_k,
+                            select=select)
     return azure_rows(trace, params, models=models)
 
 
@@ -362,6 +374,20 @@ def main(argv=None) -> int:
                     help="replay only the first N minutes of the trace")
     ap.add_argument("--seed", type=int, default=0,
                     help="thinning/expansion seed")
+    ap.add_argument("--stream", action="store_true",
+                    help="replay through the chunked streaming loader "
+                         "(bounded memory; byte-identical invocations)")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="keep only K function rows of the trace "
+                         "(implies --stream; see --select)")
+    ap.add_argument("--select", default="top", choices=("top", "stratified"),
+                    help="top-K policy: the K busiest rows, or one "
+                         "seeded pick per popularity stratum")
+    ap.add_argument("--emit-bench", default=None, metavar="PATH",
+                    help="also write the schema-versioned "
+                         "BENCH_trace.json artifact here (validated "
+                         "against the hydra-bench/v1 schema first; see "
+                         "benchmarks/bench_artifact.py)")
     ap.add_argument("--models", default=None,
                     help=f"comma-separated subset of {list(MODELS)}")
     ap.add_argument("--synthetic", action="store_true",
@@ -397,6 +423,9 @@ def main(argv=None) -> int:
               "--calibrate-from-live", file=sys.stderr)
         return 2
 
+    if args.select != "top" and args.top_k is None:
+        print("bench_trace: --select requires --top-k", file=sys.stderr)
+        return 2
     if not os.path.isfile(args.trace_file):
         print(f"bench_trace: trace file not found: {args.trace_file}",
               file=sys.stderr)
@@ -406,12 +435,19 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 2
 
-    rows = azure_section(
-        args.trace_file, calibration=args.calibration,
-        durations=args.durations, memory=args.memory,
-        target_rps=args.target_rps, max_minutes=args.max_minutes,
-        seed=args.seed,
-        models=args.models.split(",") if args.models else None)
+    try:
+        rows = azure_section(
+            args.trace_file, calibration=args.calibration,
+            durations=args.durations, memory=args.memory,
+            target_rps=args.target_rps, max_minutes=args.max_minutes,
+            seed=args.seed,
+            models=args.models.split(",") if args.models else None,
+            stream=args.stream, top_k=args.top_k, select=args.select)
+    except ValueError as e:
+        # unusable trace/window (empty expansion, malformed schema,
+        # no minutes in range): a clean diagnostic, not a traceback
+        print(f"bench_trace: {e}", file=sys.stderr)
+        return 2
     if args.synthetic:
         rows += synthetic_rows()
     if args.live:
@@ -427,6 +463,28 @@ def main(argv=None) -> int:
     for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     errors = validate_rows(rows)
+
+    if args.emit_bench:
+        from benchmarks.bench_artifact import (build_artifact,
+                                               validate_artifact,
+                                               write_artifact)
+        try:
+            doc = build_artifact(args.trace_file,
+                                 calibration=args.calibration,
+                                 target_rps=args.target_rps,
+                                 max_minutes=args.max_minutes,
+                                 seed=args.seed, top_k=args.top_k,
+                                 select=args.select)
+        except ValueError as e:
+            print(f"bench_trace: --emit-bench: {e}", file=sys.stderr)
+            return 2
+        bench_errors = validate_artifact(doc)
+        if bench_errors:
+            # an artifact that fails its own schema is never written
+            errors += [f"emit-bench: {e}" for e in bench_errors]
+        else:
+            write_artifact(doc, args.emit_bench)
+
     for e in errors:
         print(f"# FAIL {e}", file=sys.stderr)
     return 1 if errors else 0

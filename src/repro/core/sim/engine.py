@@ -18,6 +18,7 @@ re-exports everything for back-compat.
 from __future__ import annotations
 
 import heapq
+from collections.abc import Sequence
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -186,6 +187,16 @@ class SimResult:
 
 
 # ---------------------------------------------------------------------------
+def _time_sorted(seq) -> bool:
+    prev = None
+    for inv in seq:
+        if prev is not None and inv.t < prev:
+            return False
+        prev = inv.t
+    return True
+
+
+# ---------------------------------------------------------------------------
 class Engine:
     """One simulation run: an event heap plus shared mechanics, with all
     policy delegated to ``self.model`` (a ``PlatformModel``)."""
@@ -199,13 +210,24 @@ class Engine:
                       for i in range(model.n_nodes)]
         for nd in self.nodes:
             model.init_node(nd)
-        self.events: list = []         # (t, seq, kind, payload)
+        # heap entries are (t, tier, seq, kind, payload). Tier 0 is trace
+        # arrivals, tier 1 everything the engine pushes dynamically: in
+        # the eager days every arrival was pushed before any dynamic
+        # event, so at equal t the arrival's smaller seq won — the tier
+        # keeps that ordering bit-exact now that arrivals stream in
+        # lazily with *later* seqs.
+        self.events: list = []
         self.seq = 0
 
     # -- event heap --------------------------------------------------------
     def push(self, t: float, kind: str, payload) -> None:
         self.seq += 1
-        heapq.heappush(self.events, (t, self.seq, kind, payload))
+        heapq.heappush(self.events, (t, 1, self.seq, kind, payload))
+
+    def _push_arrival(self, inv) -> None:
+        self.seq += 1
+        heapq.heappush(self.events, (inv.t, 0, self.seq, "arrive",
+                                     (inv, inv.t)))
 
     # -- accounting --------------------------------------------------------
     def node_mem(self, nd: Node) -> int:
@@ -228,14 +250,36 @@ class Engine:
 
     # -- run ---------------------------------------------------------------
     def run(self, trace) -> SimResult:
+        """``trace`` may be any iterable of :class:`Invocation`. A
+        time-sorted input (every ``Trace``, every ``StreamingTrace``) is
+        fed into the heap lazily — one pending arrival at a time — so a
+        streamed trace never materializes; the heap holds only in-flight
+        events. An unsorted ``Sequence`` falls back to the old eager
+        push-everything path (identical results); an unsorted plain
+        iterator cannot be simulated single-pass and raises."""
         p, res, model = self.p, self.res, self.model
-        for inv in trace:
-            self.push(inv.t, "arrive", (inv, inv.t))
+        arrivals = iter(trace)
+        nxt = next(arrivals, None)
+        if isinstance(trace, Sequence) and not _time_sorted(trace):
+            while nxt is not None:
+                self._push_arrival(nxt)
+                nxt = next(arrivals, None)
 
         res.peak_pool_mem = self.fleet_pool_mem()
         next_sample = 0.0
-        while self.events:
-            t, _, kind, payload = heapq.heappop(self.events)
+        while self.events or nxt is not None:
+            while nxt is not None and (
+                    not self.events
+                    or (nxt.t, 0) <= (self.events[0][0], self.events[0][1])):
+                self._push_arrival(nxt)
+                prev_t = nxt.t
+                nxt = next(arrivals, None)
+                if nxt is not None and nxt.t < prev_t:
+                    raise ValueError(
+                        f"trace iterator is not time-sorted: arrival at "
+                        f"t={nxt.t} after t={prev_t}; sort the trace or "
+                        f"pass a Sequence")
+            t, _, _, kind, payload = heapq.heappop(self.events)
             while next_sample <= t:
                 res.mem_samples.append((next_sample, self.fleet_mem()))
                 res.pool_mem_samples.append(

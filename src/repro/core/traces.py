@@ -13,6 +13,11 @@ two sources.
     timestamps (seeded-uniform within each minute) and can be
     deterministically *thinned* to a target mean rps so CI-sized replays
     of the 1440-minute dataset stay fast.
+  * ``Trace.stream_azure(...)`` — the same CSVs through
+    ``repro.core.streaming``: chunked ingestion, lazy per-minute
+    expansion with bounded memory, top-K/stratified tenant selection,
+    minute-range windowing, and tenant sharding. ``from_azure`` is this
+    stream materialized, so the two agree invocation-for-invocation.
 
 A ``Trace`` is a ``Sequence[Invocation]`` — everything that accepted the
 old ``list`` of invocations (``simulate``, ``len``, indexing) accepts a
@@ -20,7 +25,6 @@ old ``list`` of invocations (``simulate``, ``len``, indexing) accepts a
 """
 from __future__ import annotations
 
-import csv
 import math
 import os
 from dataclasses import dataclass, field
@@ -137,13 +141,20 @@ class Trace(Sequence):
                                 memory_csv=memory_csv, target_rps=target_rps,
                                 max_minutes=max_minutes, seed=seed)
 
+    @classmethod
+    def stream_azure(cls, invocations_csv: str, **kw):
+        """A lazily-expanded :class:`repro.core.streaming.StreamingTrace`
+        over the same CSV schema as :meth:`from_azure`, plus the
+        streaming-only knobs (``minute_range``, ``chunk_rows``,
+        ``top_k``/``select``, ``n_shards``/``shard_index``). Same seed
+        and window -> byte-identical invocations to ``from_azure``."""
+        from repro.core.streaming import StreamingTrace
+        return StreamingTrace(invocations_csv, **kw)
+
 
 # ---------------------------------------------------------------------------
 # Azure Functions 2019 dataset loader
 # ---------------------------------------------------------------------------
-_REQUIRED_INV_COLS = ("HashOwner", "HashApp", "HashFunction")
-
-
 def discover_azure_tables(invocations_csv: str) -> dict:
     """Sibling-table convention: ``<stem>_durations.csv`` /
     ``<stem>_memory.csv`` next to the invocations CSV. Returns the
@@ -157,33 +168,6 @@ def discover_azure_tables(invocations_csv: str) -> dict:
     if os.path.exists(stem + "_memory.csv"):
         out["memory_csv"] = stem + "_memory.csv"
     return out
-
-
-def _read_csv(path: str) -> tuple[list, list]:
-    with open(path, newline="") as f:
-        reader = csv.DictReader(f)
-        if reader.fieldnames is None:
-            raise ValueError(f"azure trace {path}: empty file (no header)")
-        return list(reader.fieldnames), list(reader)
-
-
-def _percentile_sampler(row: dict, prefix: str):
-    """Inverse-CDF sampler over a percentile-table row: columns named
-    ``<prefix><q>`` for q in 0..100 become a piecewise-linear CDF."""
-    pts = []
-    for col, val in row.items():
-        if col.startswith(prefix) and val not in (None, ""):
-            try:
-                q = float(col[len(prefix):])
-            except ValueError:
-                continue
-            pts.append((q, float(val)))
-    pts.sort()
-    if len(pts) < 2:
-        return None
-    qs = np.array([q for q, _ in pts]) / 100.0
-    vs = np.array([v for _, v in pts])
-    return lambda u: float(np.interp(u, qs, vs))
 
 
 def load_azure_trace(invocations_csv: str,
@@ -210,119 +194,22 @@ def load_azure_trace(invocations_csv: str,
     ``min(1, target_rps / actual_rps)``, preserving the arrival *shape*
     (bursts, diurnal pattern) at CI-friendly volume. Same seed, same
     inputs -> byte-identical trace.
+
+    This materializes :class:`repro.core.streaming.StreamingTrace` (the
+    chunked lazy loader), so the two paths agree invocation-for-
+    invocation by construction; an empty expansion (all counts zero, or
+    thinned to nothing) raises ``ValueError`` like any other unusable
+    input.
     """
-    header, rows = _read_csv(invocations_csv)
-    missing = [c for c in _REQUIRED_INV_COLS if c not in header]
-    if missing:
-        raise ValueError(
-            f"azure trace {invocations_csv}: missing required column(s) "
-            f"{missing}; expected the Azure Functions 2019 "
-            f"invocations_per_function schema")
-    minute_cols = sorted((c for c in header if c.isdigit()), key=int)
-    if not minute_cols:
-        raise ValueError(
-            f"azure trace {invocations_csv}: no per-minute count columns "
-            f"(integer-named, e.g. '1'..'1440') found")
-    if max_minutes is not None:
-        # by minute LABEL, not column position: a sparse export with
-        # zero-count columns dropped must still truncate to the first N
-        # minutes of wall clock
-        minute_cols = [c for c in minute_cols if int(c) <= max_minutes]
-        if not minute_cols:
-            raise ValueError(
-                f"azure trace {invocations_csv}: no minute columns within "
-                f"max_minutes={max_minutes}")
-    if not rows:
-        raise ValueError(f"azure trace {invocations_csv}: no data rows")
-
-    # stable integer ids in file order
-    fid_of: dict[str, int] = {}
-    tenant_of: dict[str, int] = {}
-    for r in rows:
-        fid_of.setdefault(r["HashFunction"], len(fid_of))
-        tenant_of.setdefault(r["HashOwner"], len(tenant_of))
-
-    dur_sampler: dict[str, object] = {}
-    dur_mean_s: dict[str, float] = {}
-    if durations_csv:
-        dheader, drows = _read_csv(durations_csv)
-        if "HashFunction" not in dheader:
-            raise ValueError(f"azure durations {durations_csv}: missing "
-                             f"HashFunction column")
-        for r in drows:
-            s = _percentile_sampler(r, "percentile_Average_")
-            if s is not None:
-                dur_sampler[r["HashFunction"]] = s
-            if r.get("Average") not in (None, ""):
-                dur_mean_s[r["HashFunction"]] = float(r["Average"]) / 1e3
-
-    mem_bytes_of: dict[str, int] = {}
-    if memory_csv:
-        mheader, mrows = _read_csv(memory_csv)
-        if "HashApp" not in mheader or "AverageAllocatedMb" not in mheader:
-            raise ValueError(f"azure memory {memory_csv}: missing HashApp/"
-                             f"AverageAllocatedMb column(s)")
-        for r in mrows:
-            mb = float(r["AverageAllocatedMb"])
-            mem_bytes_of[r["HashApp"]] = int(np.clip(mb, 16, 1024) * MB)
-
-    total = sum(int(float(r[c] or 0)) for r in rows for c in minute_cols)
-    # the horizon follows the NUMERIC minute labels, not the column
-    # count, so a sparse export (zero-count minute columns dropped)
-    # keeps its real idle gaps and its real mean rate
-    horizon_s = 60.0 * int(minute_cols[-1])
-    actual_rps = total / horizon_s if horizon_s > 0 else 0.0
-    keep = 1.0
-    if target_rps is not None and actual_rps > target_rps > 0:
-        keep = target_rps / actual_rps
-
-    rng = np.random.default_rng(seed)
-    # apps the memory table doesn't cover get ONE seeded draw each (the
-    # Azure schema defines memory per app, so functions of one app share
-    # it), in first-seen row order for determinism
-    for r in rows:
-        app = r["HashApp"]
-        if app not in mem_bytes_of:
-            mem_bytes_of[app] = int(
-                np.clip(rng.lognormal(MEM_LOG_MEAN, MEM_SIGMA),
-                        *MEM_CLIP_MB) * MB)
-    out = []
-    # row-major, minute-minor iteration with one shared generator keeps
-    # the expansion deterministic for a fixed (file, seed, target_rps)
-    for r in rows:
-        fid = fid_of[r["HashFunction"]]
-        tenant = tenant_of[r["HashOwner"]]
-        fkey = r["HashFunction"]
-        sampler = dur_sampler.get(fkey)
-        mean_s = dur_mean_s.get(fkey)
-        mem = mem_bytes_of[r["HashApp"]]
-        for col in minute_cols:
-            n = int(float(r[col] or 0))
-            if n <= 0:
-                continue
-            if keep < 1.0:
-                n = int(rng.binomial(n, keep))
-                if n <= 0:
-                    continue
-            ts = 60.0 * (int(col) - 1) + rng.uniform(0.0, 60.0, n)
-            us = rng.uniform(0.001, 0.999, n)
-            for t, u in zip(np.sort(ts), us):
-                if sampler is not None:
-                    dur = max(sampler(float(u)) / 1e3, 1e-3)
-                elif mean_s is not None:
-                    dur = max(mean_s, 1e-3)
-                else:
-                    dur = float(np.clip(
-                        math.exp(DUR_LOG_MEAN
-                                 + DUR_SIGMA * _norm_ppf(float(u))),
-                        *DUR_CLIP_S))
-                out.append(Invocation(t=float(t), fid=fid, tenant=tenant,
-                                      duration_s=float(dur), mem_bytes=mem))
-    out.sort(key=lambda i: (i.t, i.fid))
-    return Trace(invocations=tuple(out), source="azure",
+    from repro.core.streaming import StreamingTrace
+    st = StreamingTrace(invocations_csv, durations_csv=durations_csv,
+                        memory_csv=memory_csv, target_rps=target_rps,
+                        max_minutes=max_minutes, seed=seed)
+    return Trace(invocations=tuple(st), source="azure",
                  meta={"path": invocations_csv, "target_rps": target_rps,
-                       "thinning_keep": keep, "raw_invocations": total,
-                       "minutes": len(minute_cols), "seed": seed})
+                       "thinning_keep": st.keep,
+                       "raw_invocations": st.raw_invocations,
+                       "minutes": st.meta["minutes"], "seed": seed})
 
 
 def _norm_ppf(u: float) -> float:

@@ -22,7 +22,9 @@ Pieces (one module each):
     ``resize_pool``) and the cluster ``ClusterBalancer`` (per-node
     commit spread + queue depth -> ``HydraCluster.rebalance()``
     mid-burst);
-  * ``loadgen``  — open-loop arrival scheduling on the wall clock;
+  * ``loadgen``  — open-loop arrival scheduling on the wall clock,
+    optionally tenant-sharded across threads for high-compression
+    replays (``ShardedLoadGenerator``);
   * ``recorder`` — live metrics -> ``SimResult``; the
     ``CalibrationProbe`` measures replay-window startup/warm/restore
     costs and RSS for the calibration round trip;
@@ -39,7 +41,8 @@ for the sim-vs-real diff (``--round-trip`` for the calibration loop).
 """
 from repro.gateway.gateway import (Autoscaler, ClusterBalancer, Gateway,
                                    GatewayParams)
-from repro.gateway.loadgen import LoadGenerator, LoadResult
+from repro.gateway.loadgen import (LoadGenerator, LoadResult,
+                                   ShardedLoadGenerator, shard_trace)
 from repro.gateway.recorder import CalibrationProbe, Recorder
 from repro.gateway.replay import ReplayConfig, replay_trace
 from repro.gateway.targets import (ClusterTarget, PlatformTarget,
@@ -51,7 +54,8 @@ from repro.gateway.workload import TraceWorkload, scaled_runtime_budget
 
 __all__ = [
     "Gateway", "GatewayParams", "Autoscaler", "ClusterBalancer",
-    "LoadGenerator", "LoadResult", "Recorder", "CalibrationProbe",
+    "LoadGenerator", "LoadResult", "ShardedLoadGenerator", "shard_trace",
+    "Recorder", "CalibrationProbe",
     "ReplayConfig", "replay_trace", "TargetAdapter",
     "RuntimeTarget", "PlatformTarget", "ClusterTarget", "wrap_target",
     "TraceWorkload", "scaled_runtime_budget", "run_validation",

@@ -24,7 +24,7 @@ from typing import Optional
 
 from repro.gateway.gateway import (Autoscaler, ClusterBalancer, Gateway,
                                    GatewayParams)
-from repro.gateway.loadgen import LoadGenerator
+from repro.gateway.loadgen import LoadGenerator, ShardedLoadGenerator
 from repro.gateway.recorder import CalibrationProbe, Recorder
 from repro.gateway.targets import DEFAULT_RUNTIME_BASE, wrap_target
 from repro.gateway.workload import TraceWorkload
@@ -40,6 +40,8 @@ class ReplayConfig:
     tenant_rate: Optional[float] = None     # trace req/s; None disables
     tenant_burst: float = 16.0
     sample_dt_s: float = 0.25          # wall seconds between fleet samples
+    shards: int = 1                    # tenant-sharded load-gen threads
+                                       # (high --compress; 1 = single loop)
     autoscale: bool = True             # platform targets only
     pool_min: int = 1
     pool_max: int = 8
@@ -166,7 +168,10 @@ def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
     if balancer is not None:
         balancer.start()
     try:
-        load = LoadGenerator(trace, gw, cfg.compress).run(t0)
+        gen = ShardedLoadGenerator(trace, gw, cfg.compress,
+                                   n_shards=cfg.shards) \
+            if cfg.shards > 1 else LoadGenerator(trace, gw, cfg.compress)
+        load = gen.run(t0)
         drained = gw.drain(timeout_s=cfg.drain_timeout_s)
     finally:
         gw.stop()

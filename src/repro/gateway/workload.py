@@ -84,16 +84,22 @@ class TraceWorkload:
 
     def register_all(self, trace, adapter) -> int:
         """Register every distinct function in ``trace`` on the adapted
-        target. Returns the number of functions registered."""
-        seen: dict = {}
-        for inv in trace:
-            if inv.fid not in seen:
-                seen[inv.fid] = inv
+        target. Returns the number of functions registered. A trace that
+        publishes its workload directly (``StreamingTrace.functions()``)
+        registers from that metadata without expanding one invocation."""
+        fns = getattr(trace, "functions", None)
+        if callable(fns):
+            seen = {f.fid: (f.tenant, f.mem_bytes) for f in fns()}
+        else:
+            seen = {}
+            for inv in trace:
+                if inv.fid not in seen:
+                    seen[inv.fid] = (inv.tenant, inv.mem_bytes)
         n = 0
-        for fid, inv in sorted(seen.items()):
+        for fid, (tenant, mem_bytes) in sorted(seen.items()):
             name = self.fid_name(fid)
-            tenant = self.tenant_name(inv.tenant)
-            adapter.register(name, self.spec_for(fid, inv.mem_bytes),
+            tenant = self.tenant_name(tenant)
+            adapter.register(name, self.spec_for(fid, mem_bytes),
                              tenant=tenant)
             self.registered[fid] = (name, tenant)
             n += 1

@@ -1,0 +1,137 @@
+"""BENCH_trace.json contract: clean empty-window CLI exits, artifact
+schema validation, the CI drift/regression gate, and --emit-bench."""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks import bench_artifact, bench_trace
+
+DATA = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "data")
+SAMPLE = os.path.join(DATA, "azure_sample.csv")
+
+
+@pytest.fixture(scope="module")
+def artifact():
+    # one short full-model sweep shared by the schema/gate tests
+    return bench_artifact.build_artifact(SAMPLE, max_minutes=5)
+
+
+def _zero_csv(tmp_path):
+    p = tmp_path / "zero.csv"
+    p.write_text("HashOwner,HashApp,HashFunction,1,2\no1,a1,f1,0,0\n")
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# Clean CLI exits (no tracebacks) on unusable windows
+# ---------------------------------------------------------------------------
+def test_bench_trace_empty_window_exits_cleanly(tmp_path, capsys):
+    rc = bench_trace.main(["--trace-file", _zero_csv(tmp_path)])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert err.startswith("bench_trace:")
+    assert "zero invocations" in err
+    assert "Traceback" not in err
+
+
+def test_bench_trace_select_requires_top_k(capsys):
+    rc = bench_trace.main(["--select", "stratified"])
+    assert rc == 2
+    assert "--top-k" in capsys.readouterr().err
+
+
+def test_bench_artifact_cli_flag_combos(tmp_path, capsys):
+    # no output or check target: nothing to do
+    assert bench_artifact.main([]) == 2
+    assert bench_artifact.main(
+        ["--gateway-compress", "60", "--out", "x.json"]) == 2
+    assert bench_artifact.main(
+        ["--out", "x.json", "--trace-file", "/no/such.csv"]) == 2
+    rc = bench_artifact.main(
+        ["--out", str(tmp_path / "b.json"),
+         "--trace-file", _zero_csv(tmp_path)])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "bench_artifact:" in err and "Traceback" not in err
+    assert not (tmp_path / "b.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# Artifact schema validation
+# ---------------------------------------------------------------------------
+def test_built_artifact_is_valid(artifact):
+    assert bench_artifact.validate_artifact(artifact) == []
+    assert artifact["schema"] == bench_artifact.SCHEMA
+    assert artifact["trace"]["path"] == "azure_sample.csv"
+    assert len(artifact["trace"]["sha256"]) == 64
+    assert artifact["streaming"]["peak_buffered"] > 0
+    assert artifact["density_ordering"]["holds"] is True
+
+
+def test_validate_artifact_rejects_bad_docs(artifact):
+    bad = copy.deepcopy(artifact)
+    bad["schema"] = "hydra-bench/v0"
+    assert any("schema" in e
+               for e in bench_artifact.validate_artifact(bad))
+    bad = copy.deepcopy(artifact)
+    bad["models"]["hydra"]["p99_s"] = float("nan")
+    assert any("non-finite" in e
+               for e in bench_artifact.validate_artifact(bad))
+    bad = copy.deepcopy(artifact)
+    bad["models"]["hydra"]["ops_per_gb_s"] = -1.0
+    assert any("> 0" in e for e in bench_artifact.validate_artifact(bad))
+    bad = copy.deepcopy(artifact)
+    del bad["models"]["hydra-pool"]
+    assert any("missing from sweep" in e
+               for e in bench_artifact.validate_artifact(bad))
+    bad = copy.deepcopy(artifact)
+    bad["density_ordering"]["holds"] = False
+    assert any("ordering" in e
+               for e in bench_artifact.validate_artifact(bad))
+
+
+# ---------------------------------------------------------------------------
+# The CI gate: schema drift and ordering regressions
+# ---------------------------------------------------------------------------
+def test_check_against_passes_value_drift(artifact):
+    moved = copy.deepcopy(artifact)
+    for m in moved["models"].values():
+        m["p99_s"] *= 1.7            # values may move PR over PR
+    assert bench_artifact.check_against(moved, artifact) == []
+
+
+def test_check_against_flags_schema_drift(artifact):
+    dropped = copy.deepcopy(artifact)
+    del dropped["models"]["hydra"]["cold_runtime"]
+    errs = bench_artifact.check_against(dropped, artifact)
+    assert any("disappeared" in e and "cold_runtime" in e for e in errs)
+    grown = copy.deepcopy(artifact)
+    grown["models"]["hydra"]["new_metric"] = 1.0
+    errs = bench_artifact.check_against(grown, artifact)
+    assert any("appeared" in e and "new_metric" in e for e in errs)
+
+
+def test_check_against_flags_ordering_regression(artifact):
+    broken = copy.deepcopy(artifact)
+    broken["density_ordering"]["holds"] = False
+    errs = bench_artifact.check_against(broken, artifact)
+    assert any("regression" in e for e in errs)
+    # held in neither document: not a regression
+    never = copy.deepcopy(artifact)
+    never["density_ordering"]["holds"] = False
+    assert bench_artifact.check_against(broken, never) == []
+
+
+# ---------------------------------------------------------------------------
+# --emit-bench writes a validated artifact
+# ---------------------------------------------------------------------------
+def test_emit_bench_writes_valid_artifact(tmp_path, capsys):
+    out = tmp_path / "BENCH_trace.json"
+    rc = bench_trace.main(["--max-minutes", "5",
+                           "--emit-bench", str(out)])
+    assert rc == 0, capsys.readouterr().err
+    doc = json.loads(out.read_text())
+    assert bench_artifact.validate_artifact(doc) == []
+    assert doc["trace"]["minutes"] == 5

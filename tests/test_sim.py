@@ -150,3 +150,57 @@ def test_tracesim_facade_reexports():
     assert tracesim._RuntimeInst is tracesim.RuntimeInst
     assert tracesim._Node is tracesim.Node
     assert tracesim.simulate is sim_pkg.simulate
+
+
+# ---------------------------------------------------------------------------
+# Streaming traces through the engine (lazy event feed)
+# ---------------------------------------------------------------------------
+def test_streamed_azure_sim_matches_in_memory_for_all_models():
+    """Acceptance: a streamed sim of the full bundled sample is
+    bit-identical to the in-memory loader's sim, for every model."""
+    from repro.core.traces import Trace
+    data = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "data")
+    sample = os.path.join(data, "azure_sample.csv")
+    dur = os.path.join(data, "azure_sample_durations.csv")
+    mem_csv = os.path.join(data, "azure_sample_memory.csv")
+    MB_ = 1 << 20
+    GB_ = 1 << 30
+    p = SimParams(runtime_cap=192 * MB_, machine_cap=3 * GB_, n_nodes=4,
+                  pool_size=8, pool_min=1, pool_max=2)
+    mem = Trace.from_azure(sample, durations_csv=dur, memory_csv=mem_csv)
+    st = Trace.stream_azure(sample, durations_csv=dur, memory_csv=mem_csv)
+    for model in MODELS:
+        a = simulate(mem, model, p)
+        b = simulate(st, model, p)
+        assert a.latencies == b.latencies, model
+        assert a.summary() == b.summary(), model
+
+
+def test_engine_accepts_sorted_iterator():
+    trace = gen_trace(n_functions=10, n_tenants=2, duration_s=60.0,
+                      mean_rps=4.0, seed=11)
+    a = simulate(list(trace), "hydra-pool", SimParams())
+    b = simulate(iter(trace), "hydra-pool", SimParams())
+    assert a.latencies == b.latencies
+    assert a.summary() == b.summary()
+
+
+def test_engine_rejects_unsorted_iterator():
+    trace = gen_trace(n_functions=10, n_tenants=2, duration_s=60.0,
+                      mean_rps=4.0, seed=11)
+    shuffled = [trace[1], trace[0]] + trace[2:]
+    with pytest.raises(ValueError, match="not time-sorted"):
+        simulate(iter(shuffled), "hydra", SimParams())
+
+
+def test_engine_sorts_unsorted_sequence_eagerly():
+    # a Sequence (unlike a bare iterator) may arrive unsorted: the
+    # engine falls back to pushing everything up front, and the result
+    # matches the sorted run
+    trace = gen_trace(n_functions=10, n_tenants=2, duration_s=60.0,
+                      mean_rps=4.0, seed=11)
+    shuffled = list(reversed(trace))
+    a = simulate(trace, "hydra-pool", SimParams())
+    b = simulate(shuffled, "hydra-pool", SimParams())
+    assert a.summary() == b.summary()

@@ -1,9 +1,12 @@
-"""Trace layer: the Trace sequence interface, synthetic parity, and the
-Azure Functions 2019 loader (determinism, thinning, schema errors)."""
+"""Trace layer: the Trace sequence interface, synthetic parity, the
+Azure Functions 2019 loader (determinism, thinning, schema errors), and
+the streaming loader (parity, windowing, selection, sharding, bounded
+memory)."""
 import os
 
 import pytest
 
+from repro.core.streaming import StreamingTrace
 from repro.core.traces import Invocation, Trace, gen_trace, load_azure_trace
 
 MB = 1 << 20
@@ -169,3 +172,155 @@ def test_azure_sample_density_ordering():
     ops = {m: simulate(tr, m, p).ops_per_gb_s()
            for m in ("hydra", "hydra-pool", "hydra-cluster")}
     assert ops["hydra-cluster"] >= ops["hydra-pool"] >= ops["hydra"]
+
+
+# ---------------------------------------------------------------------------
+# Streaming loader (repro.core.streaming)
+# ---------------------------------------------------------------------------
+def test_stream_matches_from_azure_byte_for_byte():
+    """Acceptance: the streaming loader and the in-memory loader agree
+    invocation-for-invocation — with tables, without tables, thinned."""
+    mem = Trace.from_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                           memory_csv=SAMPLE_MEM)
+    st = Trace.stream_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                            memory_csv=SAMPLE_MEM)
+    assert list(st) == list(mem)
+    assert list(Trace.stream_azure(SAMPLE)) == list(Trace.from_azure(SAMPLE))
+    thin_m = Trace.from_azure(SAMPLE, target_rps=1.0, seed=5)
+    thin_s = Trace.stream_azure(SAMPLE, target_rps=1.0, seed=5)
+    assert list(thin_s) == list(thin_m)
+    assert thin_s.keep == thin_m.meta["thinning_keep"]
+
+
+def test_stream_is_reiterable_and_reports_counts():
+    st = Trace.stream_azure(SAMPLE)
+    a = list(st)
+    assert list(st) == a                  # a second pass is identical
+    assert st.last_count == len(a)
+    d = st.describe()
+    assert d["invocations"] == len(a)
+    assert d["functions"] == 36 and d["tenants"] == 18
+    assert d["source"] == "azure-stream"
+
+
+def test_stream_chunk_size_invariant():
+    base = list(Trace.stream_azure(SAMPLE))
+    for chunk in (1, 7, 10_000):
+        assert list(Trace.stream_azure(SAMPLE, chunk_rows=chunk)) == base
+
+
+def test_stream_minute_window_is_a_subslice():
+    """Per-cell seeded RNG: a minute window expands byte-identically to
+    the same minutes of the full stream."""
+    full = list(Trace.stream_azure(SAMPLE))
+    win = Trace.stream_azure(SAMPLE, minute_range=(5, 10))
+    want = [i for i in full if 4 * 60.0 <= i.t < 10 * 60.0]
+    assert list(win) == want
+    sub = Trace.stream_azure(SAMPLE, minute_range=(1, 30)) \
+        .window(5, 10)
+    assert list(sub) == want
+
+
+def test_stream_top_k_keeps_busiest_rows():
+    full = Trace.stream_azure(SAMPLE)
+    totals = {f.fid: f.total_invocations for f in full.functions()}
+    top = Trace.stream_azure(SAMPLE, top_k=5)
+    fids = {f.fid for f in top.functions()}
+    assert fids == set(sorted(totals, key=lambda f: (-totals[f], f))[:5])
+    # kept rows expand byte-identically to their slice of the full stream
+    assert list(top) == [i for i in list(full) if i.fid in fids]
+
+
+def test_stream_stratified_selection_spans_popularity():
+    import numpy as np
+    k = 4
+    full = Trace.stream_azure(SAMPLE)
+    totals = {f.fid: f.total_invocations for f in full.functions()}
+    ranked = sorted(totals, key=lambda f: (-totals[f], f))
+    strata = np.array_split(np.arange(len(ranked)), k)
+    strat = Trace.stream_azure(SAMPLE, top_k=k, select="stratified")
+    picked = sorted(f.fid for f in strat.functions())
+    assert len(picked) == k
+    # one pick per popularity stratum: head, torso, and tail represented
+    ranks = sorted(ranked.index(fid) for fid in picked)
+    for rank, stratum in zip(ranks, strata):
+        assert stratum[0] <= rank <= stratum[-1]
+    # deterministic per seed
+    again = Trace.stream_azure(SAMPLE, top_k=k, select="stratified")
+    assert sorted(f.fid for f in again.functions()) == picked
+
+
+def test_stream_shard_partition_and_union():
+    full = Trace.stream_azure(SAMPLE)
+    all_inv = list(full)
+    shards = [full.shard(3, i) for i in range(3)]
+    parts = [list(s) for s in shards]
+    for i, part in enumerate(parts):
+        assert part and all(inv.tenant % 3 == i for inv in part)
+    merged = sorted((inv for p in parts for inv in p),
+                    key=lambda i: (i.t, i.fid))
+    assert merged == all_inv
+    # thinning keep is fixed BEFORE the shard filter: thinned shards
+    # union to exactly the thinned unsharded trace
+    thin = Trace.stream_azure(SAMPLE, target_rps=1.0, seed=5)
+    tparts = [list(thin.shard(2, i)) for i in range(2)]
+    assert sorted(tparts[0] + tparts[1], key=lambda i: (i.t, i.fid)) \
+        == list(thin)
+
+
+def test_stream_functions_metadata_matches_expansion():
+    st = Trace.stream_azure(SAMPLE, durations_csv=SAMPLE_DUR,
+                            memory_csv=SAMPLE_MEM)
+    by_fid = {}
+    for inv in st:
+        by_fid.setdefault(inv.fid, []).append(inv)
+    fns = {f.fid: f for f in st.functions()}
+    assert set(fns) == set(by_fid)
+    for fid, group in by_fid.items():
+        f = fns[fid]
+        assert f.total_invocations == len(group)
+        assert all(i.tenant == f.tenant for i in group)
+        assert all(i.mem_bytes == f.mem_bytes for i in group)
+
+
+def test_stream_peak_buffered_bounded_by_busiest_minute(tmp_path):
+    """Acceptance: peak resident invocations are set by the busiest
+    minute, NOT the trace length — 40x more minutes, same peak."""
+    def write(minutes):
+        cols = ",".join(str(m) for m in range(1, minutes + 1))
+        counts = ",".join("40" for _ in range(minutes))
+        p = tmp_path / f"t{minutes}.csv"
+        p.write_text("HashOwner,HashApp,HashFunction,"
+                     f"{cols}\no1,a1,f1,{counts}\n")
+        return str(p)
+
+    peaks = {}
+    for minutes in (10, 100, 400):
+        st = Trace.stream_azure(write(minutes))
+        assert sum(1 for _ in st) == 40 * minutes
+        peaks[minutes] = st.peak_buffered
+    assert peaks[10] == peaks[100] == peaks[400] == 40
+
+
+def test_stream_malformed_counts_raise(tmp_path):
+    base = "HashOwner,HashApp,HashFunction,1,2\n"
+    for bad in ("abc", "-3", "1.5", "inf"):
+        p = tmp_path / "bad.csv"
+        p.write_text(base + f"o1,a1,f1,{bad},2\n")
+        with pytest.raises(ValueError, match="invocation count"):
+            StreamingTrace(str(p))
+
+
+def test_stream_empty_expansion_raises(tmp_path):
+    p = tmp_path / "zero.csv"
+    p.write_text("HashOwner,HashApp,HashFunction,1,2\no1,a1,f1,0,0\n")
+    with pytest.raises(ValueError, match="zero invocations"):
+        Trace.stream_azure(str(p))
+    with pytest.raises(ValueError, match="minute_range"):
+        Trace.stream_azure(SAMPLE, minute_range=(100, 200))
+    with pytest.raises(ValueError, match="chunk_rows"):
+        Trace.stream_azure(SAMPLE, chunk_rows=0)
+    with pytest.raises(ValueError, match="select"):
+        Trace.stream_azure(SAMPLE, top_k=3, select="bogus")
+    with pytest.raises(ValueError, match="shard_index"):
+        Trace.stream_azure(SAMPLE, n_shards=2, shard_index=5)

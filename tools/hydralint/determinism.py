@@ -6,10 +6,10 @@ The simulator's value rests on the golden-parity pin in
 couples the event loop to wall-clock time, unseeded randomness, or hash
 iteration order silently breaks that pin.
 
-Scope: files under ``core/sim/``, plus ``core/tracesim.py`` and
-``core/traces.py`` (path-matched), plus any file carrying a
-``# hydralint: sim-module`` marker (used by fixtures and future sim
-modules that live elsewhere).
+Scope: files under ``core/sim/``, plus ``core/tracesim.py``,
+``core/traces.py``, and ``core/streaming.py`` (path-matched), plus any
+file carrying a ``# hydralint: sim-module`` marker (used by fixtures
+and future sim modules that live elsewhere).
 
 Flags:
   * ``time.time`` / ``time.monotonic`` / ``time.perf_counter`` /
@@ -30,7 +30,8 @@ from tools.hydralint.purity import _import_aliases
 
 CODE = "HL003"
 
-SIM_PATH_PARTS = ("core/sim/", "core/tracesim.py", "core/traces.py")
+SIM_PATH_PARTS = ("core/sim/", "core/tracesim.py", "core/traces.py",
+                  "core/streaming.py")
 TIME_FNS = {"time", "monotonic", "perf_counter", "sleep", "monotonic_ns",
             "time_ns", "perf_counter_ns"}
 
