@@ -127,6 +127,9 @@ def _gateway_leg(trace_file: str, seed: int, compress: float) -> dict:
                        seed=seed)
     report = run_validation(trace, compress=compress, pool_size=4)
     live, sim = report["live"], report["sim"]
+    extras = report.get("extras") or {}
+    overhead = extras.get("request_overhead_ms") or {}
+    exe = extras.get("exe_cache") or {}
     return {
         "compress": compress,
         "requests": live["requests"],
@@ -134,6 +137,15 @@ def _gateway_leg(trace_file: str, seed: int, compress: float) -> dict:
         "cold_runtime": live["cold_runtime"],
         "pool_claims": live["pool_claims"],
         "dropped": live["dropped"],
+        # per-request gateway overhead (latency - emulated duration) in
+        # WALL ms — the request-path cost this repo's slab allocator +
+        # compile caches keep flat; the CI overhead budget gates on the
+        # bench_hotpath twin of this number
+        "request_overhead_ms": {"mean": overhead.get("mean"),
+                                "p99": overhead.get("p99")},
+        "exe_compiles": exe.get("compiles"),
+        "exe_disk_hits": exe.get("disk_hits"),
+        "exe_cache_hits": exe.get("cache_hits"),
         "sim_p99_s": sim["p99_s"],
         "sim_cold_runtime": sim["cold_runtime"],
         "cold_within_tolerance": report["gates"]["cold_runtime"]["passed"],
@@ -191,6 +203,15 @@ def validate_artifact(doc: dict) -> list:
     if peak and n and peak > n:
         errors.append(f"streaming.peak_buffered={peak} exceeds "
                       f"invocations={n}")
+    gateway = doc.get("gateway")
+    if gateway is not None:
+        for k in ("mean", "p99"):
+            v = (gateway.get("request_overhead_ms") or {}).get(k)
+            if not isinstance(v, (int, float)) or not math.isfinite(v) \
+                    or v < 0:
+                errors.append(
+                    f"gateway.request_overhead_ms.{k}: expected finite "
+                    f">= 0, got {v!r}")
     return errors
 
 

@@ -1,4 +1,4 @@
-"""Arenas: the memory-isolate analog (paper §3.2).
+"""Arenas: the memory-isolate analog (paper §3.2), slab-allocated.
 
 An Arena is a pre-allocated, fixed-budget set of device buffers (KV-cache
 slabs / SSM state / scratch) that hosts ONE in-flight invocation. Arenas are
@@ -6,9 +6,25 @@ pooled: ``acquire`` pops a warm arena in microseconds (the paper's <500 us
 isolate start), ``release`` returns it, idle arenas are destroyed after a
 TTL (paper default: 10 s) releasing memory back to the device allocator.
 
+The pool is a *slab allocator*: device memory for a signature is minted at
+most once per slab (``register_signature`` / ``prealloc`` pre-touch slabs off
+the clock), and the warm claim path never copies host memory. Two warm claim
+flavors exist:
+
+- **donated reuse** (``arena.reuse``): the claimant owns the slab's previous
+  contents (same ``owner``, e.g. successive invocations of one function whose
+  programs donate their cache back into the slab) — the slab is handed out
+  as-is, zero work.
+- **zeroed reuse** (``arena.zeroed``): the slab last belonged to a different
+  owner; it is scrubbed on-device by a jitted donate-in-place fill compiled
+  AOT at registration time. No ``device_put`` host→device copy occurs — the
+  fill runs where the data lives.
+
 Because accelerator programs can only address buffers passed to them, an
 invocation physically cannot touch another invocation's arena — the
-shape-safe equivalent of the paper's isolate heap confinement.
+shape-safe equivalent of the paper's isolate heap confinement. The zeroed
+handoff extends that guarantee across time: a reused slab is
+indistinguishable from a freshly allocated one.
 """
 from __future__ import annotations
 
@@ -18,6 +34,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.budget import MemoryBudget
 from repro.core.metrics import Metrics
@@ -30,52 +47,180 @@ def tree_bytes(tree) -> int:
                if hasattr(x, "dtype"))
 
 
+def _zero_tree(bufs):
+    # traced under jit (donate_argnums=(0,)) — the zeros are materialized
+    # on-device into the donated slab, never staged through the host
+    return jax.tree.map(jnp.zeros_like, bufs)
+
+
 @dataclass
 class Arena:
     signature: tuple
     buffers: Any                       # pytree of device arrays
     nbytes: int
+    owner: Optional[str] = None        # fid of the last claimant
     created_at: float = field(default_factory=time.monotonic)
     last_used: float = field(default_factory=time.monotonic)
     uses: int = 0
 
 
 class ArenaPool:
-    """Per-signature free lists with TTL eviction and watermark prealloc."""
+    """Signature-keyed slab pool with TTL eviction and watermark prealloc.
+
+    ``exe_cache`` (optional): route the per-signature zeroer compilation
+    through the shared ``ExecutableCache`` so it is AOT-compiled once,
+    shared fleet-wide, and persisted to disk with the other executables.
+    """
 
     def __init__(self, budget: Optional[MemoryBudget] = None,
                  ttl_s: float = DEFAULT_TTL_S,
-                 metrics: Optional[Metrics] = None):
+                 metrics: Optional[Metrics] = None,
+                 exe_cache=None):
         self.budget = budget
         self.ttl_s = ttl_s
         self.metrics = metrics or Metrics()
+        self.exe_cache = exe_cache
         self._free: dict[tuple, list[Arena]] = {}
+        self._factories: dict[tuple, Callable[[], Any]] = {}
+        self._zeroers: dict[tuple, Callable] = {}
         self._lock = threading.Lock()
         self.live = 0
 
     # ------------------------------------------------------------------
-    def acquire(self, signature: tuple,
-                factory: Callable[[], Any]) -> Arena:
+    # Registration-time work (off the request path)
+    # ------------------------------------------------------------------
+    def register_signature(self, signature: tuple,
+                           factory: Callable[[], Any],
+                           buffer_specs: Any = None) -> None:
+        """Install the slab factory for ``signature`` and AOT-compile its
+        donate-in-place zeroer. Called at function-registration time — the
+        modeled ``fn_register_s`` cost — so ``acquire`` never compiles.
+
+        ``buffer_specs``: pytree of ``jax.ShapeDtypeStruct`` matching what
+        ``factory`` produces. When omitted, one slab is materialized to
+        derive the specs; it stays in the free list (a pre-touched
+        prealloc of 1), so no memory is minted twice.
+        """
         with self._lock:
+            self._factories.setdefault(signature, factory)
+            have_zeroer = signature in self._zeroers
+        if have_zeroer:
+            return
+        if buffer_specs is None:
+            arena = self.acquire(signature, factory)
+            buffer_specs = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                arena.buffers)
+            self.release(arena)
+        zeroer = self._compile_zeroer(signature, buffer_specs)
+        with self._lock:
+            self._zeroers.setdefault(signature, zeroer)
+
+    def _compile_zeroer(self, signature: tuple, buffer_specs: Any):
+        # hydralint: disable=HL002 — registration-time AOT compile (the
+        # zeroer is part of the modeled fn_register_s cost); when an
+        # unregistered signature first hits the scrub path this runs once
+        # and is amortized like any cold compile, never per-claim
+        def lower():
+            return jax.jit(_zero_tree, donate_argnums=(0,)).lower(
+                buffer_specs)
+        if self.exe_cache is not None:
+            key = ("arena-zeroer",) + tuple(signature)
+            return self.exe_cache.get_or_compile(key, lower).compiled
+        return lower().compile()
+
+    def prealloc(self, signature: tuple, factory: Callable[[], Any],
+                 n: int, owner: Optional[str] = None) -> None:
+        """Pre-touch ``n`` slabs off the clock (paper: pre-allocated cached
+        isolates). Also installs the factory + zeroer so later claims of
+        this signature are pure pool operations. Pass ``owner`` to
+        pre-assign the slabs (a factory-fresh slab is already in the
+        zeroed state, so the owner's first claim skips even the scrub)."""
+        self.register_signature(signature, factory)
+        arenas = [self.acquire(signature, factory, owner=owner)
+                  for _ in range(n)]
+        for arena in arenas:
+            self.release(arena)
+
+    # ------------------------------------------------------------------
+    # Request path
+    # ------------------------------------------------------------------
+    def acquire(self, signature: tuple,
+                factory: Optional[Callable[[], Any]] = None,
+                owner: Optional[str] = None) -> Arena:
+        with self._lock:
+            arena = None
             free = self._free.get(signature)
             if free:
-                arena = free.pop()
+                if owner is not None:
+                    # prefer a slab this owner donated back: its contents
+                    # are the owner's own, so no scrub is needed
+                    for i in range(len(free) - 1, -1, -1):
+                        if free[i].owner == owner:
+                            arena = free.pop(i)
+                            break
+                if arena is None:
+                    arena = free.pop()
+            if arena is not None:
                 arena.last_used = time.monotonic()
                 arena.uses += 1
-                self.metrics.inc("arena.warm")
-                return arena
+                # ownership unchanged (incl. owner-less single-tenant
+                # users): the claimant owns the slab's contents already,
+                # so handing them back untouched leaks nothing
+                donated = arena.owner == owner
+                zeroer = self._zeroers.get(signature)
+        if arena is not None:
+            self.metrics.inc("arena.warm")
+            if donated:
+                self.metrics.inc("arena.reuse")
+            else:
+                self._scrub(arena, zeroer)
+                self.metrics.inc("arena.zeroed")
+            arena.owner = owner
+            return arena
+        return self._acquire_cold(signature, factory, owner)
+
+    def _scrub(self, arena: Arena, zeroer) -> None:
+        """On-device donate-in-place zero fill: cross-owner isolation
+        without a host round trip."""
+        if zeroer is None:
+            zeroer = self._lazy_zeroer(arena)
+        arena.buffers = jax.block_until_ready(zeroer(arena.buffers))
+
+    def _lazy_zeroer(self, arena: Arena):
+        """One-time zeroer install for signatures used without
+        ``register_signature`` (direct pool users); cached thereafter."""
+        specs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), arena.buffers)
+        zeroer = self._compile_zeroer(arena.signature, specs)
+        with self._lock:
+            return self._zeroers.setdefault(arena.signature, zeroer)
+
+    def _acquire_cold(self, signature: tuple,
+                      factory: Optional[Callable[[], Any]],
+                      # hydralint: disable=HL002 — the cold slab mint is
+                      # the modeled isolate_cold_s cost (paper Fig 3);
+                      # factory may device_put, and the slab is pre-touched
+                      # (blocked on) before handout so later claims never
+                      # fault host copies in
+                      owner: Optional[str] = None) -> Arena:
+        if factory is None:
+            with self._lock:
+                factory = self._factories.get(signature)
+        if factory is None:
+            raise KeyError(f"no factory for arena signature {signature!r}")
         # cold path: allocate outside the lock (paper Fig 3: allocation
         # latency grows with concurrent isolates — keep it off the fast path)
         self.metrics.inc("arena.cold")
         with self.metrics.timeit("arena.alloc_s"):
-            buffers = factory()
+            buffers = jax.block_until_ready(factory())
         nbytes = tree_bytes(buffers)
         if self.budget is not None:
             self.budget.reserve(nbytes)
         with self._lock:
             self.live += 1
         return Arena(signature=signature, buffers=buffers, nbytes=nbytes,
-                     uses=1)
+                     owner=owner, uses=1)
 
     def release(self, arena: Arena) -> None:
         arena.last_used = time.monotonic()
@@ -83,14 +228,6 @@ class ArenaPool:
             self._free.setdefault(arena.signature, []).append(arena)
 
     # ------------------------------------------------------------------
-    def prealloc(self, signature: tuple, factory: Callable[[], Any],
-                 n: int) -> None:
-        """Warm the pool (paper: pre-allocated cached isolates)."""
-        for _ in range(n):
-            arena = self.acquire(signature, factory)
-            # undo the warm/cold accounting skew of prealloc
-            self.release(arena)
-
     def evict_idle(self, now: Optional[float] = None) -> int:
         """Destroy arenas idle beyond the TTL; returns bytes released."""
         now = now if now is not None else time.monotonic()

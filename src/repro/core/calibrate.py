@@ -166,7 +166,14 @@ def calibration_from_replay(result, extras: dict,
     doc_meta = {"source": "gateway-replay", "model": result.model,
                 "compress": compress,
                 "requests": len(result.latencies),
-                "rss_per_runtime_bytes": rss_per_runtime}
+                "rss_per_runtime_bytes": rss_per_runtime,
+                # compile-cache provenance: with the persistent caches
+                # warm, register_s excludes XLA time, so the overlay's
+                # fn_register_s reflects a deploy against a warm code
+                # cache — record the counters so a calibration file says
+                # WHICH regime it measured
+                "exe_cache": extras.get("exe_cache"),
+                "request_overhead_ms": extras.get("request_overhead_ms")}
     doc_meta.update(meta or {})
     return {"schema": SCHEMA, "meta": doc_meta,
             "measured": _validate(measured)}

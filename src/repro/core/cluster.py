@@ -146,10 +146,12 @@ class HydraCluster:
             # opted out (persist_executables=False) — matching the
             # platform-level default of zero-recompile restores across
             # boots
-            persist = None
+            persist = xla_dir = None
             if p.snapshot_dir and p.platform.persist_executables is not False:
                 persist = os.path.join(p.snapshot_dir, "executables")
-            self.exe_cache = ExecutableCache(persist_dir=persist)
+                xla_dir = os.path.join(p.snapshot_dir, "xla_cache")
+            self.exe_cache = ExecutableCache(persist_dir=persist,
+                                             xla_cache_dir=xla_dir)
         self.nodes: list[_NodeState] = []
         for i in range(p.n_nodes):
             plat_params = PlatformParams(**vars(p.platform))

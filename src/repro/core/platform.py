@@ -122,10 +122,15 @@ class HydraPlatform:
         self.params = params or PlatformParams(**kw)
         p = self.params
         if exe_cache is None:
-            persist = None
+            persist = xla_dir = None
             if p.snapshot_dir and p.persist_executables_on():
                 persist = os.path.join(p.snapshot_dir, "executables")
-            exe_cache = ExecutableCache(persist_dir=persist)
+                # second persistence layer: jax's own compilation cache,
+                # so even entries without a serialized payload (or with a
+                # stale one) skip XLA on the next boot
+                xla_dir = os.path.join(p.snapshot_dir, "xla_cache")
+            exe_cache = ExecutableCache(persist_dir=persist,
+                                        xla_cache_dir=xla_dir)
         self.exe_cache = exe_cache
         self.metrics = Metrics()
         self._lock = threading.RLock()
@@ -179,10 +184,19 @@ class HydraPlatform:
                 rt.shutdown()
                 return
 
+    def _prune_refills(self) -> None:
+        """Drop finished refill/resize threads from the bookkeeping list.
+        Runs on EVERY claim (not only when a new refill spawns), so a long
+        replay with ``refill=False`` phases cannot accumulate dead thread
+        objects without bound."""
+        with self._lock:
+            self._refills = [x for x in self._refills if x.is_alive()]
+
     def _claim_runtime(self) -> HydraRuntime:
         """Pop a pre-warmed runtime; cold-boot only when the pool is dry.
         The replacement boot happens on a background thread — the claiming
         request never waits on it."""
+        self._prune_refills()
         t0 = time.perf_counter()
         with self._lock:
             rt = self._pool.pop() if self._pool else None
@@ -219,8 +233,7 @@ class HydraPlatform:
                                  name="hydra-pool-refill")
             t.start()
             with self._lock:
-                self._refills = [x for x in self._refills
-                                 if x.is_alive()] + [t]
+                self._refills.append(t)
         return rt
 
     def _return_runtime(self, rt: HydraRuntime) -> None:
@@ -271,6 +284,12 @@ class HydraPlatform:
                                  if x.is_alive()] + [t]
         else:
             self.prewarm()
+
+    @property
+    def refill_backlog(self) -> int:
+        """Refill/resize thread objects still tracked (for tests/stats)."""
+        with self._lock:
+            return len(self._refills)
 
     @property
     def pool_available(self) -> int:

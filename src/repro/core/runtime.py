@@ -59,7 +59,8 @@ class HydraRuntime:
         self.registry = FunctionRegistry()
         self.exe_cache = executable_cache or ExecutableCache()
         self.arena_pool = ArenaPool(budget=self.budget, ttl_s=arena_ttl_s,
-                                    metrics=self.metrics)
+                                    metrics=self.metrics,
+                                    exe_cache=self.exe_cache)
         self._queue: "queue.Queue" = queue.Queue()
         self._workers = [threading.Thread(target=self._worker_loop,
                                           daemon=True, name=f"hydra-w{i}")
@@ -116,15 +117,20 @@ class HydraRuntime:
             key, lambda: jax.jit(fresh).lower(params_spec, args_spec),
             fid=fid)
         nb = max(spec.arena_bytes, 8)
-        # plain host-zeros + device_put: a jnp.zeros here would XLA-compile
-        # one fill kernel PER DISTINCT arena size, turning the first
-        # allocation of every size into a compile stall on the request
-        # path — the opposite of the paper's <500us isolate start
+        # the factory mints a slab at most once per pooled arena (cold
+        # path only); host-zeros + device_put keeps the mint itself free
+        # of per-size XLA fill kernels. Warm claims never run this: the
+        # slab allocator hands back pooled device memory, scrubbed by the
+        # per-signature donate-in-place zeroer registered below
         factory = lambda: {"scratch": jax.device_put(
             np.zeros((nb // 4,), np.float32))}
+        arena_sig = ("scratch", nb)
+        self.arena_pool.register_signature(
+            arena_sig, factory,
+            {"scratch": jax.ShapeDtypeStruct((nb // 4,), jnp.float32)})
         return Function(fid=fid, tenant=tenant, spec=spec, mem_budget=budget,
                         entry={"invoke": entry.compiled},
-                        arena_sig=("scratch", nb), arena_factory=factory)
+                        arena_sig=arena_sig, arena_factory=factory)
 
     def _register_lm(self, fid, spec: LMSpec, tenant, mem_budget) -> Function:
         prog = ModelProgram(spec.cfg, remat=False)
@@ -153,12 +159,22 @@ class HydraRuntime:
             return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                 cache_specs)
 
+        self.arena_pool.register_signature(("lm",) + fkey, factory,
+                                           cache_specs)
         func = Function(fid=fid, tenant=tenant, spec=spec, mem_budget=budget,
                         entry={"decode": entry_dec.compiled},
                         arena_sig=("lm",) + fkey, arena_factory=factory)
         func.prog = prog
         func.params_spec = params_spec
         return func
+
+    def prewarm_arenas(self, fid: str, n: int = 1) -> None:
+        """Pre-touch ``n`` slabs for ``fid``'s arena signature off the
+        clock, so the function's first invocations are allocation-free
+        (paper: pre-allocated cached isolates)."""
+        func = self.registry.get(fid)
+        self.arena_pool.prealloc(func.arena_sig, func.arena_factory, n,
+                                 owner=fid)
 
     def _lm_prefill_exe(self, func: Function, prompt_len: int):
         """Exact-length prefill program, AOT-compiled + cached on first use
@@ -247,7 +263,8 @@ class HydraRuntime:
     def _do_invoke(self, fid: str, args):
         func = self.registry.get(fid)
         func.invocations += 1
-        arena = self.arena_pool.acquire(func.arena_sig, func.arena_factory)
+        arena = self.arena_pool.acquire(func.arena_sig, func.arena_factory,
+                                        owner=fid)
         try:
             result = func.entry["invoke"](func.spec.params, args)
             result = jax.block_until_ready(result)
@@ -261,7 +278,8 @@ class HydraRuntime:
         spec: LMSpec = func.spec
         prompt = jnp.asarray(prompt_tokens, jnp.int32).reshape(1, -1)
         prefill_exe = self._lm_prefill_exe(func, prompt.shape[1])
-        arena = self.arena_pool.acquire(func.arena_sig, func.arena_factory)
+        arena = self.arena_pool.acquire(func.arena_sig, func.arena_factory,
+                                        owner=fid)
         try:
             tok, cache = prefill_exe(spec.params, arena.buffers, prompt,
                                      jnp.int32(0))

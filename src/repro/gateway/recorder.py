@@ -333,9 +333,34 @@ class Recorder:
             )
         return res
 
+    def request_overhead_ms(self) -> dict:
+        """Per-request overhead (latency − emulated duration) in WALL
+        milliseconds — the request-path cost the gateway itself adds:
+        registry lookup, slab claim, dispatch, release. Overheads are
+        recorded in trace seconds, so wall ms = trace_s / compress × 1e3.
+        This is the number the overhead budget gates on
+        (``benchmarks/bench_hotpath.py`` measures the same path without a
+        trace)."""
+        with self._lock:
+            ovh = sorted(self._overheads)
+        n = len(ovh)
+        if n == 0:
+            return {"count": 0, "mean": None, "p99": None}
+        to_ms = 1e3 / self.compress
+        p99 = ovh[min(n - 1, int(round(0.99 * (n - 1))))]
+        return {"count": n,
+                "mean": (sum(ovh) / n) * to_ms,
+                "p99": p99 * to_ms}
+
     def extras(self) -> dict:
+        overhead = self.request_overhead_ms()
+        exe = self.adapter.exe_stats()
+        slab = self.adapter.slab_counts()
         with self._lock:
             return {"drops": dict(self._drops),
                     "retries": self._retries,
                     "sample_failures": self._sample_failures,
-                    "errors": list(self._errors)}
+                    "errors": list(self._errors),
+                    "request_overhead_ms": overhead,
+                    "exe_cache": exe,
+                    "slab": slab}

@@ -86,6 +86,27 @@ class TargetAdapter:
         """Per-runtime ``Metrics`` objects (code-install timings)."""
         return [rt.metrics for rt in self._runtimes()]
 
+    def exe_stats(self) -> dict:
+        """Fleet compile counters summed over ``exe_caches()``:
+        ``compiles`` (real XLA runs), ``disk_hits`` (serialized
+        executables loaded), ``cache_hits`` (in-process entry reuse),
+        ``entries``, and whether jax's persistent compilation cache is
+        active. A warm fleet should show compiles == 0 after boot."""
+        out = {"compiles": 0, "disk_hits": 0, "cache_hits": 0,
+               "entries": 0, "total_compile_s": 0.0,
+               "xla_cache_enabled": False}
+        for cache in self.exe_caches():
+            if cache is None:
+                continue
+            s = cache.stats()
+            out["compiles"] += s["compiles"]
+            out["disk_hits"] += s["disk_hits"]
+            out["cache_hits"] += s["hits"]
+            out["entries"] += s["entries"]
+            out["total_compile_s"] += s["total_compile_s"]
+            out["xla_cache_enabled"] |= bool(s.get("xla_cache_enabled"))
+        return out
+
     def sample(self) -> dict:
         """Point-in-time fleet sample: mem/pool bytes + runtime count,
         plus the per-node ``node_mem_bytes`` series (one stats pass
@@ -107,6 +128,19 @@ class TargetAdapter:
             cold += c.get("arena.cold", 0)
             warm += c.get("arena.warm", 0)
         return cold, warm
+
+    def slab_counts(self) -> dict:
+        """Warm-claim breakdown summed fleet-wide: ``arena.reuse``
+        (donated slab handed back to its owner untouched) vs
+        ``arena.zeroed`` (cross-owner handover scrubbed on-device by the
+        jitted fill). Their sum tracks ``warm_isolate``; the ratio says
+        how often colocation actually pays."""
+        reuse = zeroed = 0
+        for rt in self._runtimes():
+            c = rt.metrics.counters
+            reuse += c.get("arena.reuse", 0)
+            zeroed += c.get("arena.zeroed", 0)
+        return {"reuse": reuse, "zeroed": zeroed}
 
     def shutdown(self) -> None:
         self.target.shutdown()

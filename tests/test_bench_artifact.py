@@ -1,12 +1,13 @@
 """BENCH_trace.json contract: clean empty-window CLI exits, artifact
-schema validation, the CI drift/regression gate, and --emit-bench."""
+schema validation, the CI drift/regression gate, --emit-bench, and the
+warm-path overhead budget gate."""
 import copy
 import json
 import os
 
 import pytest
 
-from benchmarks import bench_artifact, bench_trace
+from benchmarks import bench_artifact, bench_hotpath, bench_trace
 
 DATA = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "data")
 SAMPLE = os.path.join(DATA, "azure_sample.csv")
@@ -122,6 +123,63 @@ def test_check_against_flags_ordering_regression(artifact):
     never = copy.deepcopy(artifact)
     never["density_ordering"]["holds"] = False
     assert bench_artifact.check_against(broken, never) == []
+
+
+# ---------------------------------------------------------------------------
+# The overhead budget gate (benchmarks/bench_hotpath.py)
+# ---------------------------------------------------------------------------
+FAKE_RESULT = {"arena_us": {"zeroed_reuse": {"mean": 120.0},
+                            "donated_reuse": {"mean": 3.0}},
+               "invoke_ms": {"mean": 0.5, "p99": 1.2}}
+
+
+def test_check_budget_logic():
+    ok = {"budgets": {"warm_invoke_ms_mean": 2.0,
+                      "warm_invoke_ms_p99": 10.0,
+                      "arena_zeroed_reuse_us_mean": 3000.0,
+                      "arena_donated_reuse_us_mean": 500.0}}
+    assert bench_hotpath.check_budget(FAKE_RESULT, ok) == []
+    tight = {"budgets": {"warm_invoke_ms_mean": 0.1}}
+    errs = bench_hotpath.check_budget(FAKE_RESULT, tight)
+    assert len(errs) == 1 and "warm_invoke_ms_mean" in errs[0]
+    unknown = {"budgets": {"no_such_metric": 1.0}}
+    errs = bench_hotpath.check_budget(FAKE_RESULT, unknown)
+    assert errs and "unknown budget key" in errs[0]
+
+
+def test_committed_budget_keys_all_gateable():
+    with open(os.path.join(DATA, "overhead_budget.json")) as f:
+        doc = json.load(f)
+    assert doc["schema"] == "hydra-overhead-budget/v1"
+    # every committed key names a metric the gate measures (an ideal
+    # zero-overhead result passes all of them)
+    zero = {"arena_us": {"zeroed_reuse": {"mean": 0.0},
+                         "donated_reuse": {"mean": 0.0}},
+            "invoke_ms": {"mean": 0.0, "p99": 0.0}}
+    assert bench_hotpath.check_budget(zero, doc) == []
+
+
+def test_hotpath_bench_runs_and_gates(tmp_path, capsys):
+    out = tmp_path / "hot.json"
+    generous = tmp_path / "budget.json"
+    generous.write_text(json.dumps(
+        {"schema": "hydra-overhead-budget/v1",
+         "budgets": {"warm_invoke_ms_mean": 1e6, "warm_invoke_ms_p99": 1e6,
+                     "arena_zeroed_reuse_us_mean": 1e9,
+                     "arena_donated_reuse_us_mean": 1e9}}))
+    rc = bench_hotpath.main(["--iters", "5", "--json", str(out),
+                             "--budget", str(generous)])
+    assert rc == 0
+    assert "within budget" in capsys.readouterr().out
+    res = json.loads(out.read_text())
+    # a fully warm invoke never compiles or mints a slab
+    assert res["invoke_ms"]["compiles_during"] == 0
+    assert res["invoke_ms"]["cold_allocs"] == 0
+    # the slab claim path beats the pre-slab per-claim device_put
+    assert (res["arena_us"]["donated_reuse"]["mean"]
+            < res["arena_us"]["legacy_devput"]["mean"])
+    impossible = {"budgets": {"warm_invoke_ms_mean": 1e-9}}
+    assert bench_hotpath.check_budget(res, impossible)
 
 
 # ---------------------------------------------------------------------------

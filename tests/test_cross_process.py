@@ -73,7 +73,8 @@ def test_restore_in_fresh_process_zero_recompiles(tmp_path):
         exported = plat.export_function("t0/f")
     finally:
         plat.shutdown()
-    assert plat.exe_cache.stats()["compiles"] == 1
+    # program + its arena-signature zeroer: both compiled at registration
+    assert plat.exe_cache.stats()["compiles"] == 2
 
     meta = {"snapshot_dir": str(tmp_path),
             "fid": exported["fid"], "tenant": exported["tenant"],
@@ -101,3 +102,46 @@ def test_restore_in_fresh_process_zero_recompiles(tmp_path):
     # cache persisted by the PARENT process
     assert stats["compiles"] == 0
     assert stats["disk_hits"] >= 1
+    # snapshot_dir also switched on jax's persistent compilation cache
+    # (the layer under serialize_executable) in both processes
+    assert stats["xla_cache_enabled"] is True
+
+
+# ---------------------------------------------------------------------------
+XLA_CACHE_CHILD = r"""
+import sys
+import jax
+import jax.numpy as jnp
+from repro.core.executable_cache import enable_persistent_compilation_cache
+
+assert enable_persistent_compilation_cache(sys.argv[1])
+out = jax.jit(lambda x: (x * 3.0 + 1.0).sum())(jnp.ones((257,), jnp.float32))
+print(float(out))
+"""
+
+
+def test_xla_persistent_cache_reused_by_fresh_process(tmp_path):
+    """The layer UNDER our serialize_executable payloads: jax's persistent
+    compilation cache. The first process writes its XLA compilation to the
+    shared directory; a second, fresh process compiling the same program
+    replays it from disk instead of re-running XLA — no new cache entries
+    appear. (Run in subprocesses because the cache dir is process-global.)"""
+    cache_dir = tmp_path / "xla"
+    script = tmp_path / "xla_child.py"
+    script.write_text(XLA_CACHE_CHILD)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = REPO_SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+
+    def run_once():
+        proc = subprocess.run(
+            [sys.executable, str(script), str(cache_dir)],
+            capture_output=True, text=True, timeout=300, env=env)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        assert proc.stdout.strip().splitlines()[-1] == "1028.0"
+        return sorted(os.listdir(cache_dir))
+
+    first = run_once()
+    assert first                     # the compile was written to disk
+    second = run_once()
+    assert second == first           # cache hit: nothing new written

@@ -65,6 +65,18 @@ def test_replay_emits_simresult_schema_and_full_accounting():
     assert res.mem_samples and res.mem_samples[-1][1] > 0
     assert extras["submitted"] == len(trace)
     assert extras["drained"]
+    # per-request overhead (latency - emulated duration) in wall ms: one
+    # sample per served request, and the emulated sleep never undershoots
+    ovh = extras["request_overhead_ms"]
+    assert ovh["count"] == s["requests"]
+    assert ovh["mean"] > 0.0
+    assert ovh["p99"] >= 0.0
+    # fleet compile + slab counters surface through the adapter
+    exe = extras["exe_cache"]
+    assert exe["entries"] >= 1
+    assert {"compiles", "disk_hits", "cache_hits",
+            "xla_cache_enabled"} <= set(exe)
+    assert {"reuse", "zeroed"} == set(extras["slab"])
 
 
 def test_replay_against_cluster_target():

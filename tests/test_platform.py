@@ -72,6 +72,27 @@ def test_pool_return_without_refill(tmp_path):
         plat.shutdown()
 
 
+def test_refill_thread_bookkeeping_pruned_on_claim():
+    """Regression: finished refill threads are dropped from the tracking
+    list on EVERY claim, so repeated claim/evict cycles cannot accumulate
+    dead thread objects without bound."""
+    # a 4 MB runtime holds ONE ~3 MB function: every placement spills to
+    # a fresh pool claim instead of colocating
+    plat = HydraPlatform(pool_size=1, runtime_budget_bytes=4 * MB)
+    try:
+        for i in range(4):
+            plat.register_function(f"t{i}/f",
+                                   spec(arena_bytes=int(1.5 * MB)),
+                                   tenant=f"t{i}")
+            plat.invoke(f"t{i}/f", ARGS)     # placement claims a runtime
+            assert wait_for(lambda: plat.pool_available == 1)
+        # 4 claims spawned 4 refill threads; without pruning the backlog
+        # would be 4 — with it, at most the latest (+ one straggler) remain
+        assert plat.refill_backlog <= 2
+    finally:
+        plat.shutdown()
+
+
 def test_colocation_packs_until_budget_saturates():
     # conservative placement estimate per function: ~3 MB (1.5 MB
     # registration reservation + one 1.5 MB arena). Colocated same-shape
@@ -194,7 +215,8 @@ def test_snapshot_restore_zero_recompile_across_platform_boots(tmp_path):
         exported = plat.export_function("t0/f")
     finally:
         plat.shutdown()
-    assert plat.exe_cache.stats()["compiles"] == 1
+    # program + its arena-signature zeroer: both compiled at registration
+    assert plat.exe_cache.stats()["compiles"] == 2
 
     fresh = HydraPlatform(pool_size=1, runtime_budget_bytes=64 * MB,
                           snapshot_dir=str(tmp_path))

@@ -2,6 +2,7 @@
 code-cache sharing, arena pooling, budgets, continuous batching."""
 import time
 
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -53,7 +54,9 @@ def test_executable_cache_shared_across_tenants():
         rt.register_function("a/f", simple_spec(), tenant="a")
         rt.register_function("b/f", simple_spec(), tenant="b")
         stats = rt.exe_cache.stats()
-        assert stats["entries"] == 1
+        # one shared program entry + one shared arena-zeroer entry (the
+        # slab scrubber compiles once per signature, at registration)
+        assert stats["entries"] == 2
         assert stats["hits"] == 1
     finally:
         rt.shutdown()
@@ -65,9 +68,62 @@ def test_executable_cache_unshared_baseline():
     try:
         rt.register_function("a/f", simple_spec(), tenant="a")
         rt.register_function("b/f", simple_spec(), tenant="b")
-        assert rt.exe_cache.stats()["entries"] == 2
+        # two per-fid program copies + the (always-shared) arena zeroer
+        assert rt.exe_cache.stats()["entries"] == 3
     finally:
         rt.shutdown()
+
+
+def test_slab_isolation_cross_owner_zeroed_same_owner_donated():
+    """Slab allocator semantics: a slab handed across owners is scrubbed
+    on-device (indistinguishable from a fresh zeroed arena); a slab
+    claimed back by its own donor keeps its contents untouched."""
+    pool = ArenaPool(ttl_s=1e9)
+    sig = ("slab", 4096)
+    factory = lambda: {"buf": jnp.zeros((1024,), jnp.float32)}
+    pool.register_signature(
+        sig, factory, {"buf": jax.ShapeDtypeStruct((1024,), jnp.float32)})
+
+    a = pool.acquire(sig, owner="fn-a")
+    a.buffers = {"buf": a.buffers["buf"] + 7.0}     # fn-a dirties the slab
+    pool.release(a)
+
+    b = pool.acquire(sig, owner="fn-a")             # donor reclaims it
+    assert b is a
+    assert float(b.buffers["buf"][0]) == 7.0        # contents preserved
+    pool.release(b)
+
+    c = pool.acquire(sig, owner="fn-b")             # cross-owner handover
+    assert c is a
+    assert float(jnp.max(jnp.abs(c.buffers["buf"]))) == 0.0   # scrubbed
+    pool.release(c)
+
+    counters = pool.metrics.counters
+    assert counters["arena.cold"] == 1              # one slab ever minted
+    assert counters["arena.reuse"] == 1
+    assert counters["arena.zeroed"] == 1
+
+
+def test_prealloc_pretouches_slabs_off_the_clock():
+    pool = ArenaPool(ttl_s=1e9)
+    calls = []
+
+    def factory():
+        calls.append(1)
+        return {"buf": jnp.zeros((256,), jnp.float32)}
+
+    pool.prealloc(("sig",), factory, 3, owner="fn")
+    assert len(calls) == 3                 # n slabs actually materialized
+    assert pool.idle_count == 3
+    cold = pool.metrics.counters["arena.cold"]
+    reuse = pool.metrics.counters.get("arena.reuse", 0)
+    arenas = [pool.acquire(("sig",), owner="fn") for _ in range(3)]
+    assert len(calls) == 3                 # claims are pure pool pops...
+    assert pool.metrics.counters["arena.cold"] == cold
+    # ...and pre-assigned slabs skip even the scrub (donated reuse)
+    assert pool.metrics.counters["arena.reuse"] == reuse + 3
+    for a in arenas:
+        pool.release(a)
 
 
 def test_arena_pool_warm_and_ttl():

@@ -3,8 +3,13 @@
 History: PR 4 shipped ``jnp.zeros`` arena factories that compiled a fill
 kernel per size, and PR 5 found ``workload.args_for`` building payloads
 with eager ``jnp.full`` — throttling the open-loop replay ~2.3x until it
-was moved to host ``np`` arrays.  The request path must not create
-device arrays, trigger XLA compilation, sleep, or touch the filesystem.
+was moved to host ``np`` arrays.  The slab-allocator PR moved per-claim
+``jax.device_put`` host→device copies off the warm path entirely (slabs
+are minted once and scrubbed on-device), so ``device_put`` is banned on
+the hot path alongside the jnp constructors, and the claim/return pair
+(``ArenaPool.acquire``/``release``) are both roots.  The request path
+must not create device arrays, copy host memory to device, trigger XLA
+compilation, sleep, or touch the filesystem.
 
 The checker builds a name-resolved call graph from the request-path
 roots (gateway admission + worker loop, ``HydraRuntime.invoke`` /
@@ -37,6 +42,7 @@ ROOTS = {
     "HydraRuntime._do_invoke",
     "TraceWorkload.args_for",
     "ArenaPool.acquire",
+    "ArenaPool.release",
     "HydraPlatform.invoke",
     "HydraCluster.invoke",
 }
@@ -85,6 +91,8 @@ def _banned(call: ast.Call, aliases: dict) -> Optional[str]:
         return "open() file I/O"
     if full.startswith("jax.numpy.") and parts[-1] in JNP_CONSTRUCTORS:
         return f"eager jnp.{parts[-1]} device-array construction"
+    if full == "jax.device_put":
+        return "device_put host->device copy"
     if full.startswith("jax.") and parts[-1] in COMPILE_TRIGGERS:
         return f"jax.{parts[-1]} compile trigger"
     if len(parts) > 1 and parts[-1] in FILE_IO_METHODS \
