@@ -38,10 +38,11 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.bench_trace import AZURE_PARAMS, AZURE_SAMPLE
 from repro.core.calibrate import apply_calibration
+from repro.core.tracing import SUMMARY_KEYS
 from repro.core.tracesim import (MODELS, SimParams, Trace,
                                  discover_azure_tables, simulate)
 
-SCHEMA = "hydra-bench/v1"
+SCHEMA = "hydra-bench/v2"
 DENSITY_ORDER = ("hydra-cluster", "hydra-pool", "hydra")
 # per-model metrics carried into the artifact (summary-schema keys)
 MODEL_KEYS = ("requests", "p50_s", "p99_s", "cold_runtime", "cold_isolate",
@@ -125,11 +126,22 @@ def _gateway_leg(trace_file: str, seed: int, compress: float) -> dict:
 
     trace = load_trace(trace_file, target_rps=2.0, max_minutes=10,
                        seed=seed)
-    report = run_validation(trace, compress=compress, pool_size=4)
+    # attribute=True traces every request of the live leg, so the
+    # artifact carries per-phase latency columns (hydra-bench/v2) and
+    # the measured dominant phase of the p99 tail
+    report = run_validation(trace, compress=compress, pool_size=4,
+                            attribute=True)
     live, sim = report["live"], report["sim"]
     extras = report.get("extras") or {}
     overhead = extras.get("request_overhead_ms") or {}
     exe = extras.get("exe_cache") or {}
+    tracing = extras.get("tracing") or {}
+    # fixed tracing vocabulary (Tracer.summary emits every key, None
+    # when a phase never fired) -> run-stable key shape for the drift
+    # gate; wall milliseconds
+    phases = {name: {"p50_ms": s.get("p50_ms"), "p99_ms": s.get("p99_ms")}
+              for name, s in (tracing.get("phases") or {}).items()}
+    att = (report.get("attribution") or {}).get("p99") or {}
     return {
         "compress": compress,
         "requests": live["requests"],
@@ -146,6 +158,11 @@ def _gateway_leg(trace_file: str, seed: int, compress: float) -> dict:
         "exe_compiles": exe.get("compiles"),
         "exe_disk_hits": exe.get("disk_hits"),
         "exe_cache_hits": exe.get("cache_hits"),
+        # hydra-bench/v2: per-phase wall-ms latency columns from a
+        # fully-sampled request trace of the smoke replay, plus the
+        # measured dominant phase of the p99 tail (docs/observability.md)
+        "phases": phases,
+        "p99_dominant_phase": att.get("dominant"),
         "sim_p99_s": sim["p99_s"],
         "sim_cold_runtime": sim["cold_runtime"],
         "cold_within_tolerance": report["gates"]["cold_runtime"]["passed"],
@@ -212,6 +229,19 @@ def validate_artifact(doc: dict) -> list:
                 errors.append(
                     f"gateway.request_overhead_ms.{k}: expected finite "
                     f">= 0, got {v!r}")
+        # v2: the per-phase columns must carry the FULL tracing
+        # vocabulary (unfired phases are null, never absent) and the
+        # end-to-end 'total' phase must have actually been observed
+        phases = gateway.get("phases") or {}
+        missing_phases = [k for k in SUMMARY_KEYS if k not in phases]
+        if missing_phases:
+            errors.append(f"gateway.phases missing vocabulary entries: "
+                          f"{missing_phases}")
+        total_p99 = (phases.get("total") or {}).get("p99_ms")
+        if not isinstance(total_p99, (int, float)) \
+                or not math.isfinite(total_p99) or total_p99 <= 0:
+            errors.append(f"gateway.phases.total.p99_ms: expected finite "
+                          f"> 0, got {total_p99!r}")
     return errors
 
 

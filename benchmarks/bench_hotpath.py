@@ -22,6 +22,12 @@ dispatch, block, release — with host-side request args built per call
 exactly as the gateway's ``TraceWorkload.args_for`` does. Reported as
 mean/p99 ms over ``--iters`` serial invokes.
 
+**Tracing level**: the same warm invoke through the request-tracing
+layer (``repro.core.tracing``) — ``invoke_traced_off`` carries the
+no-op ``NULL_TRACE`` an unsampled gateway request pays (delta vs plain
+budget-gated at ~0) and ``invoke_traced_on`` the fully-sampled span
+path (loose absolute budget; sampling is opt-in).
+
 ``--budget PATH`` compares the request-level numbers (and the zeroed
 slab handover) against a committed budget JSON and exits non-zero on
 any overrun — the CI ``bench-artifact`` job runs exactly that, so a
@@ -118,8 +124,15 @@ def bench_arena(iters: int) -> dict:
             "donated_reuse": _series(donated_reuse, iters)}
 
 
-def bench_invoke(iters: int) -> dict:
-    """Fully warm end-to-end invoke (the budgeted request path)."""
+def bench_invoke(iters: int) -> tuple:
+    """Fully warm end-to-end invoke (the budgeted request path), plus
+    the same invoke through the tracing layer — disabled (the
+    ``NULL_TRACE`` every unsampled gateway request carries: one
+    sampling decision + no-op spans, budget-gated at ~0 delta) and
+    fully sampled (span objects + clock reads + breakdown, the opt-in
+    ``--trace-sample`` cost, loose absolute budget)."""
+    from repro.core.tracing import Tracer
+
     rt = HydraRuntime(n_workers=2, janitor=False)
     try:
         rt.register_function("hot/fn", _spec())
@@ -131,22 +144,52 @@ def bench_invoke(iters: int) -> dict:
             # host-side payload per request, as the gateway builds it
             rt.invoke("hot/fn", {"x": np.full((VEC,), 3.0, np.float32)})
 
+        tracer_off = Tracer(0.0)
+
+        def invoke_traced_off():
+            ctx = tracer_off.start_request("hot/fn")
+            rt.invoke("hot/fn", {"x": np.full((VEC,), 3.0, np.float32)},
+                      ctx=ctx)
+            ctx.finish("ok")
+
+        # bounded export window: a long --iters run must not grow memory
+        tracer_on = Tracer(1.0, max_traces=64, hist_max_samples=64)
+
+        def invoke_traced_on():
+            ctx = tracer_on.start_request("hot/fn")
+            rt.invoke("hot/fn", {"x": np.full((VEC,), 3.0, np.float32)},
+                      ctx=ctx)
+            ctx.finish("ok")
+
         series = _series(invoke, iters)
+        traced_off = _series(invoke_traced_off, iters)
+        traced_on = _series(invoke_traced_on, iters)
         series["compiles_during"] = (rt.exe_cache.stats()["compiles"]
                                      - compiles0)
         series["cold_allocs"] = (rt.metrics.snapshot()["counters"]
                                  .get("arena.cold", 0) - cold0)
-        return series
+        return series, traced_off, traced_on
     finally:
         rt.shutdown()
 
 
 def measure(iters: int) -> dict:
+    plain, traced_off, traced_on = bench_invoke(iters)
+    ms = lambda s: {k: (v * 1e3 if isinstance(v, float) else v)
+                    for k, v in s.items()}
+    off_ms, on_ms = ms(traced_off), ms(traced_on)
+    plain_ms = ms(plain)
     return {"arena_us": {name: {k: (v * 1e6 if isinstance(v, float) else v)
                                 for k, v in s.items()}
                          for name, s in bench_arena(iters).items()},
-            "invoke_ms": {k: (v * 1e3 if isinstance(v, float) else v)
-                          for k, v in bench_invoke(iters).items()}}
+            "invoke_ms": plain_ms,
+            "invoke_traced_ms": {
+                "off": off_ms, "on": on_ms,
+                # the gated number: what every UNSAMPLED request pays
+                # for tracing being compiled in (expected ~0; negative
+                # means jitter, which the budget treats as within)
+                "off_delta_mean": off_ms["mean"] - plain_ms["mean"],
+            }}
 
 
 def check_budget(result: dict, budget_doc: dict) -> list:
@@ -160,6 +203,10 @@ def check_budget(result: dict, budget_doc: dict) -> list:
             result["arena_us"]["zeroed_reuse"]["mean"],
         "arena_donated_reuse_us_mean":
             result["arena_us"]["donated_reuse"]["mean"],
+        "tracing_off_delta_ms_mean":
+            result["invoke_traced_ms"]["off_delta_mean"],
+        "traced_invoke_ms_mean":
+            result["invoke_traced_ms"]["on"]["mean"],
     }
     errors = []
     for name, limit in budgets.items():
@@ -185,6 +232,13 @@ def run(iters: int = 200) -> list:
                  "us_per_call": inv["mean"] * 1e3,
                  "derived": f"p99_ms={inv['p99']:.3f};"
                             f"compiles={inv['compiles_during']}"})
+    tr = res["invoke_traced_ms"]
+    rows.append({"name": "hotpath.invoke_traced_off",
+                 "us_per_call": tr["off"]["mean"] * 1e3,
+                 "derived": f"delta_ms={tr['off_delta_mean']:.4f}"})
+    rows.append({"name": "hotpath.invoke_traced_on",
+                 "us_per_call": tr["on"]["mean"] * 1e3,
+                 "derived": f"p99_ms={tr['on']['p99']:.3f}"})
     return rows
 
 
@@ -215,6 +269,12 @@ def main(argv=None) -> int:
     print(f"hotpath.invoke_warm,mean={inv['mean']:.3f}ms,"
           f"p99={inv['p99']:.3f}ms,compiles={inv['compiles_during']},"
           f"cold_allocs={inv['cold_allocs']}")
+    tr = res["invoke_traced_ms"]
+    print(f"hotpath.invoke_traced_off,mean={tr['off']['mean']:.3f}ms,"
+          f"p99={tr['off']['p99']:.3f}ms,"
+          f"delta_vs_plain={tr['off_delta_mean'] * 1e3:+.1f}us")
+    print(f"hotpath.invoke_traced_on,mean={tr['on']['mean']:.3f}ms,"
+          f"p99={tr['on']['p99']:.3f}ms")
 
     if args.json:
         with open(args.json, "w") as f:

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.budget import MemoryBudget
 from repro.core.metrics import Metrics
+from repro.core.tracing import NULL_TRACE
 
 DEFAULT_TTL_S = 10.0
 
@@ -147,38 +148,43 @@ class ArenaPool:
     # ------------------------------------------------------------------
     def acquire(self, signature: tuple,
                 factory: Optional[Callable[[], Any]] = None,
-                owner: Optional[str] = None) -> Arena:
-        with self._lock:
-            arena = None
-            free = self._free.get(signature)
-            if free:
-                if owner is not None:
-                    # prefer a slab this owner donated back: its contents
-                    # are the owner's own, so no scrub is needed
-                    for i in range(len(free) - 1, -1, -1):
-                        if free[i].owner == owner:
-                            arena = free.pop(i)
-                            break
-                if arena is None:
-                    arena = free.pop()
+                owner: Optional[str] = None, ctx=None) -> Arena:
+        ctx = ctx or NULL_TRACE
+        with ctx.span("arena_acquire") as sp:
+            with self._lock:
+                arena = None
+                free = self._free.get(signature)
+                if free:
+                    if owner is not None:
+                        # prefer a slab this owner donated back: its contents
+                        # are the owner's own, so no scrub is needed
+                        for i in range(len(free) - 1, -1, -1):
+                            if free[i].owner == owner:
+                                arena = free.pop(i)
+                                break
+                    if arena is None:
+                        arena = free.pop()
+                if arena is not None:
+                    arena.last_used = time.monotonic()
+                    arena.uses += 1
+                    # ownership unchanged (incl. owner-less single-tenant
+                    # users): the claimant owns the slab's contents already,
+                    # so handing them back untouched leaks nothing
+                    donated = arena.owner == owner
+                    zeroer = self._zeroers.get(signature)
             if arena is not None:
-                arena.last_used = time.monotonic()
-                arena.uses += 1
-                # ownership unchanged (incl. owner-less single-tenant
-                # users): the claimant owns the slab's contents already,
-                # so handing them back untouched leaks nothing
-                donated = arena.owner == owner
-                zeroer = self._zeroers.get(signature)
-        if arena is not None:
-            self.metrics.inc("arena.warm")
-            if donated:
-                self.metrics.inc("arena.reuse")
-            else:
-                self._scrub(arena, zeroer)
-                self.metrics.inc("arena.zeroed")
-            arena.owner = owner
-            return arena
-        return self._acquire_cold(signature, factory, owner)
+                self.metrics.inc("arena.warm")
+                if donated:
+                    sp.set(kind="reuse")
+                    self.metrics.inc("arena.reuse")
+                else:
+                    self._scrub(arena, zeroer)
+                    sp.set(kind="zeroed")
+                    self.metrics.inc("arena.zeroed")
+                arena.owner = owner
+                return arena
+            sp.set(kind="cold")
+            return self._acquire_cold(signature, factory, owner)
 
     def _scrub(self, arena: Arena, zeroer) -> None:
         """On-device donate-in-place zero fill: cross-owner isolation

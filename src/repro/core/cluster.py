@@ -289,17 +289,18 @@ class HydraCluster:
             self.metrics.inc("pool.resize")
             node.platform.resize_pool(target)
 
-    def _maybe_restore(self, node: _NodeState, fid: str) -> None:
+    def _maybe_restore(self, node: _NodeState, fid: str, ctx=None) -> None:
         # a migrated/rebalanced function arrives on its new node evicted;
         # the next invocation restores it lazily from the local snapshot
         rec = node.platform._records.get(fid)
         if rec is not None and rec.evicted:
-            node.platform.restore(fid, eager=False)
+            node.platform.restore(fid, eager=False, ctx=ctx)
 
-    def invoke(self, fid: str, args, *, now: Optional[float] = None):
+    def invoke(self, fid: str, args, *, now: Optional[float] = None,
+               ctx=None):
         node = self._on_arrival(fid, now)
-        self._maybe_restore(node, fid)
-        return node.platform.invoke(fid, args)
+        self._maybe_restore(node, fid, ctx)
+        return node.platform.invoke(fid, args, ctx)
 
     def generate(self, fid: str, prompt_tokens, max_new_tokens: int = 16, *,
                  now: Optional[float] = None):

@@ -63,6 +63,7 @@ from repro.core.errors import (FunctionNotRegisteredError, HydraError,
 from repro.core.executable_cache import ExecutableCache
 from repro.core.metrics import Metrics
 from repro.core.runtime import GB, HydraRuntime, registration_budget
+from repro.core.tracing import NULL_TRACE
 from repro.ft import checkpoint as ckpt
 
 
@@ -107,6 +108,11 @@ class PlatformParams:
     # snapshot_dir is set, so snapshot restore is zero-recompile across
     # boots by default). Pass False to opt out explicitly.
     persist_executables: Optional[bool] = None
+    # bound per-histogram sample storage (reservoir above the bound;
+    # count/sum stay exact) for this platform's metrics and every runtime
+    # it boots — the gateway path sets metrics.DEFAULT_RESERVOIR so a
+    # full-day replay's histograms stay O(bound). None = unbounded exact.
+    hist_max_samples: Optional[int] = None
 
     def persist_executables_on(self) -> bool:
         if self.persist_executables is None:
@@ -132,7 +138,7 @@ class HydraPlatform:
             exe_cache = ExecutableCache(persist_dir=persist,
                                         xla_cache_dir=xla_dir)
         self.exe_cache = exe_cache
-        self.metrics = Metrics()
+        self.metrics = Metrics(hist_max_samples=p.hist_max_samples)
         self._lock = threading.RLock()
         self._pool: list[HydraRuntime] = []
         self._active: list[HydraRuntime] = []
@@ -152,7 +158,8 @@ class HydraPlatform:
                               arena_ttl_s=p.arena_ttl_s,
                               n_workers=p.n_workers,
                               executable_cache=self.exe_cache,
-                              janitor=p.janitor)
+                              janitor=p.janitor,
+                              hist_max_samples=p.hist_max_samples)
         self.metrics.inc("runtime.boots")
         return rt
 
@@ -192,49 +199,54 @@ class HydraPlatform:
         with self._lock:
             self._refills = [x for x in self._refills if x.is_alive()]
 
-    def _claim_runtime(self) -> HydraRuntime:
+    def _claim_runtime(self, ctx=None) -> HydraRuntime:
         """Pop a pre-warmed runtime; cold-boot only when the pool is dry.
         The replacement boot happens on a background thread — the claiming
         request never waits on it."""
-        self._prune_refills()
-        t0 = time.perf_counter()
-        with self._lock:
-            rt = self._pool.pop() if self._pool else None
-            if rt is None:
-                # reserve the boot slot atomically with the cap check
-                if (self.n_runtimes + self._booting
-                        >= self.params.max_runtimes):
-                    raise HydraError(
-                        f"node runtime cap ({self.params.max_runtimes}) "
-                        "reached; a multi-node platform would spill to "
-                        "another host")
-                self._booting += 1
-        if rt is not None:
-            self.metrics.inc("pool.claim")
+        ctx = ctx or NULL_TRACE
+        with ctx.span("pool_claim") as sp:
+            self._prune_refills()
+            t0 = time.perf_counter()
             with self._lock:
-                self._active.append(rt)
-            # the whole warm handover — lock wait, pop, activation — so a
-            # live replay can calibrate the simulator's pool_claim_s from
-            # measured claims (core/calibrate)
-            self.metrics.observe("pool_claim_s", time.perf_counter() - t0)
-        else:
-            self.metrics.inc("pool.miss")
-            booted = None
-            try:
-                booted = self._boot_runtime()
-            finally:
+                rt = self._pool.pop() if self._pool else None
+                if rt is None:
+                    # reserve the boot slot atomically with the cap check
+                    if (self.n_runtimes + self._booting
+                            >= self.params.max_runtimes):
+                        raise HydraError(
+                            f"node runtime cap ({self.params.max_runtimes}) "
+                            "reached; a multi-node platform would spill to "
+                            "another host")
+                    self._booting += 1
+            if rt is not None:
+                sp.set(source="pool")
+                self.metrics.inc("pool.claim")
                 with self._lock:
-                    self._booting -= 1
-                    if booted is not None:
-                        self._active.append(booted)
-            rt = booted
-        if self.params.refill:
-            t = threading.Thread(target=self.prewarm, daemon=True,
-                                 name="hydra-pool-refill")
-            t.start()
-            with self._lock:
-                self._refills.append(t)
-        return rt
+                    self._active.append(rt)
+                # the whole warm handover — lock wait, pop, activation — so a
+                # live replay can calibrate the simulator's pool_claim_s from
+                # measured claims (core/calibrate)
+                self.metrics.observe("pool_claim_s",
+                                     time.perf_counter() - t0)
+            else:
+                sp.set(source="boot")
+                self.metrics.inc("pool.miss")
+                booted = None
+                try:
+                    booted = self._boot_runtime()
+                finally:
+                    with self._lock:
+                        self._booting -= 1
+                        if booted is not None:
+                            self._active.append(booted)
+                rt = booted
+            if self.params.refill:
+                t = threading.Thread(target=self.prewarm, daemon=True,
+                                     name="hydra-pool-refill")
+                t.start()
+                with self._lock:
+                    self._refills.append(t)
+            return rt
 
     def _return_runtime(self, rt: HydraRuntime) -> None:
         """An emptied runtime goes back to the pool (or shuts down if the
@@ -365,10 +377,12 @@ class HydraPlatform:
             rec.runtime = rt
             return True
 
-    def _ensure_placed(self, rec: _FunctionRecord) -> HydraRuntime:
+    def _ensure_placed(self, rec: _FunctionRecord,
+                       ctx=None) -> HydraRuntime:
         # per-record lock: racing first invocations of one fid must not
         # both run placement (the loser would register a zombie copy into
         # a second runtime)
+        ctx = ctx or NULL_TRACE
         with rec.place_lock:
             if rec.runtime is not None:
                 return rec.runtime
@@ -393,9 +407,10 @@ class HydraPlatform:
                 if not self._try_admit(rec, rt):
                     continue
                 try:
-                    ok = rt.register_function(rec.fid, rec.spec,
-                                              tenant=rec.tenant,
-                                              mem_budget=rec.mem_budget)
+                    with ctx.span("register"):
+                        ok = rt.register_function(rec.fid, rec.spec,
+                                                  tenant=rec.tenant,
+                                                  mem_budget=rec.mem_budget)
                 except HydraOOMError:
                     rec.runtime = None
                     continue        # raced/underestimated: try the next
@@ -419,13 +434,14 @@ class HydraPlatform:
                 self.metrics.inc("place.colocated")
                 return rt
             # saturated everywhere: spill to a pool instance
-            rt = self._claim_runtime()
+            rt = self._claim_runtime(ctx)
             with self._lock:
                 rec.runtime = rt     # visible to racing admission checks
             try:
-                ok = rt.register_function(rec.fid, rec.spec,
-                                          tenant=rec.tenant,
-                                          mem_budget=rec.mem_budget)
+                with ctx.span("register"):
+                    ok = rt.register_function(rec.fid, rec.spec,
+                                              tenant=rec.tenant,
+                                              mem_budget=rec.mem_budget)
             except BaseException:
                 rec.runtime = None
                 self._return_runtime(rt)
@@ -473,11 +489,11 @@ class HydraPlatform:
     # ------------------------------------------------------------------
     # Request path
     # ------------------------------------------------------------------
-    def invoke(self, fid: str, args: Any) -> Any:
+    def invoke(self, fid: str, args: Any, ctx=None) -> Any:
         rec = self._record(fid)
-        rt = self._ensure_placed(rec)
+        rt = self._ensure_placed(rec, ctx)
         rec.invocations += 1
-        return rt.invoke(fid, args)
+        return rt.invoke(fid, args, ctx)
 
     def generate(self, fid: str, prompt_tokens, max_new_tokens: int = 16):
         rec = self._record(fid)
@@ -542,10 +558,11 @@ class HydraPlatform:
             if rt is not None and len(rt.registry) == 0:
                 self._return_runtime(rt)
 
-    def restore(self, fid: str, *, eager: bool = True) -> None:
+    def restore(self, fid: str, *, eager: bool = True, ctx=None) -> None:
         """Reload an evicted function from its snapshot into the fleet.
         Re-registration hits the shared ExecutableCache, so no request-path
         (or restore-path) compilation happens."""
+        ctx = ctx or NULL_TRACE
         rec = self._record(fid)
         with rec.place_lock:
             if rec.runtime is not None:
@@ -553,15 +570,16 @@ class HydraPlatform:
             if rec.evicted:
                 if rec.snapshot_path is None:
                     raise HydraError(f"{fid}: no snapshot to restore from")
-                with self.metrics.timeit("restore_s"):
-                    tree = ckpt.restore(rec.snapshot_path, 0,
-                                        {"params": rec.params_spec})
+                with ctx.span("restore"):
+                    with self.metrics.timeit("restore_s"):
+                        tree = ckpt.restore(rec.snapshot_path, 0,
+                                            {"params": rec.params_spec})
                 rec.spec = dataclasses.replace(rec.spec,
                                                params=tree["params"])
                 rec.evicted = False
                 self.metrics.inc("restores")
         if eager:
-            self._ensure_placed(rec)
+            self._ensure_placed(rec, ctx)
 
     # ------------------------------------------------------------------
     # Migration hooks (used by HydraCluster to move a sandbox off-node)

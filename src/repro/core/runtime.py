@@ -26,6 +26,7 @@ from repro.core.executable_cache import ExecutableCache
 from repro.core.metrics import Metrics
 from repro.core.registry import (CallableSpec, Function, FunctionRegistry,
                                  LMSpec)
+from repro.core.tracing import NULL_TRACE, trace_now
 from repro.models.programs import ModelProgram
 
 GB = 1 << 30
@@ -53,8 +54,9 @@ class HydraRuntime:
                  arena_ttl_s: float = 10.0,
                  n_workers: int = 4,
                  executable_cache: Optional[ExecutableCache] = None,
-                 janitor: bool = True):
-        self.metrics = Metrics()
+                 janitor: bool = True,
+                 hist_max_samples: Optional[int] = None):
+        self.metrics = Metrics(hist_max_samples=hist_max_samples)
         self.budget = MemoryBudget(memory_budget_bytes, name="hydra")
         self.registry = FunctionRegistry()
         self.exe_cache = executable_cache or ExecutableCache()
@@ -216,18 +218,21 @@ class HydraRuntime:
     # ------------------------------------------------------------------
     # Invocation (paper Listing 1)
     # ------------------------------------------------------------------
-    def invoke(self, fid: str, args: Any) -> Any:
-        return self.invoke_async(fid, args).result()
+    def invoke(self, fid: str, args: Any, ctx=None) -> Any:
+        return self.invoke_async(fid, args, ctx).result()
 
-    def invoke_async(self, fid: str, args: Any) -> Future:
+    def invoke_async(self, fid: str, args: Any, ctx=None) -> Future:
+        # the trace context rides the queue item: the worker thread that
+        # dequeues it continues the same request's spans (contextvars
+        # would not survive this thread hop)
         fut: Future = Future()
-        self._queue.put(("invoke", fid, args, time.perf_counter(), fut))
+        self._queue.put(("invoke", fid, args, time.perf_counter(), fut, ctx))
         return fut
 
     def generate(self, fid: str, prompt_tokens, max_new_tokens: int = 16):
         fut: Future = Future()
         self._queue.put(("generate", fid, (prompt_tokens, max_new_tokens),
-                         time.perf_counter(), fut))
+                         time.perf_counter(), fut, None))
         return fut.result()
 
     def deregister_function(self, fid: str) -> bool:
@@ -248,10 +253,13 @@ class HydraRuntime:
                 item = self._queue.get(timeout=0.1)
             except queue.Empty:
                 continue
-            kind, fid, args, t_enq, fut = item
+            kind, fid, args, t_enq, fut, ctx = item
+            if ctx is not None and ctx.sampled:
+                # t_enq is already trace_now()'s clock (perf_counter)
+                ctx.add_span("dispatch", t_enq, trace_now())
             try:
                 if kind == "invoke":
-                    result = self._do_invoke(fid, args)
+                    result = self._do_invoke(fid, args, ctx)
                 else:
                     result = self._do_generate(fid, *args)
                 self.metrics.observe("invoke_latency_s",
@@ -260,14 +268,16 @@ class HydraRuntime:
             except Exception as e:  # surface to caller
                 fut.set_exception(e)
 
-    def _do_invoke(self, fid: str, args):
+    def _do_invoke(self, fid: str, args, ctx=None):
+        ctx = ctx or NULL_TRACE
         func = self.registry.get(fid)
         func.invocations += 1
         arena = self.arena_pool.acquire(func.arena_sig, func.arena_factory,
-                                        owner=fid)
+                                        owner=fid, ctx=ctx)
         try:
-            result = func.entry["invoke"](func.spec.params, args)
-            result = jax.block_until_ready(result)
+            with ctx.span("compute"):
+                result = func.entry["invoke"](func.spec.params, args)
+                result = jax.block_until_ready(result)
         finally:
             self.arena_pool.release(arena)
         return result

@@ -41,6 +41,7 @@ from typing import Optional
 from repro.core.cluster import AdaptivePoolPolicy, ArrivalRateEstimator
 from repro.core.errors import FunctionNotRegisteredError, HydraOOMError
 from repro.core.scheduler import TokenBucket
+from repro.core.tracing import NULL_TRACE, trace_now
 
 
 @dataclass
@@ -62,18 +63,24 @@ class _Request:
     name: str                          # registered function name
     sched_wall: float                  # intended (open-loop) arrival
     retries: int = 0
+    ctx: object = NULL_TRACE           # RequestTrace when head-sampled
+    t_enq: float = 0.0                 # trace_now() at (re-)enqueue
 
 
 class Gateway:
     """Multi-threaded front door over an adapted serving stack."""
 
     def __init__(self, adapter, workload, params: GatewayParams,
-                 recorder, autoscaler: Optional["Autoscaler"] = None):
+                 recorder, autoscaler: Optional["Autoscaler"] = None,
+                 tracer=None):
         self.adapter = adapter
         self.workload = workload
         self.params = params
         self.recorder = recorder
         self.autoscaler = autoscaler
+        # core.tracing.Tracer or None; None keeps the request path on the
+        # zero-cost NULL_TRACE everywhere (the measured disabled path)
+        self.tracer = tracer
         self._queues: dict[str, deque] = {}
         self._rr: list[str] = []       # tenant round-robin order
         self._rr_next = 0
@@ -102,6 +109,10 @@ class Gateway:
             self.recorder.drop("unknown")
             return False
         tenant = self.workload.tenant_name(inv.tenant)
+        # head-sampling decision is made here, once per admitted request;
+        # an unsampled request carries the shared no-op NULL_TRACE
+        ctx = (self.tracer.start_request(name, tenant)
+               if self.tracer is not None else NULL_TRACE)
         # platform adaptive pool sizing sees every arrival, accepted or
         # not: load shed at the door is still load the pool should
         # absorb (cluster targets feed their own per-node estimators
@@ -118,7 +129,15 @@ class Gateway:
                                         burst=p.tenant_burst))
             if not bucket.try_take():
                 self.recorder.drop("throttled")
+                ctx.finish("throttled")
                 return False
+        t_enq = 0.0
+        if ctx.sampled:
+            # admission covers routing + token bucket up to the enqueue;
+            # queue_wait starts from the SAME timestamp so the two spans
+            # cannot overlap (conservation invariant)
+            t_enq = trace_now()
+            ctx.add_span("admission", ctx.t0, t_enq)
         with self._cv:
             q = self._queues.get(tenant)
             if q is None:
@@ -126,8 +145,10 @@ class Gateway:
                 self._rr.append(tenant)
             if len(q) >= p.queue_depth:
                 self.recorder.drop("rejected")
+                ctx.finish("rejected")
                 return False
-            q.append(_Request(inv=inv, name=name, sched_wall=sched_wall))
+            q.append(_Request(inv=inv, name=name, sched_wall=sched_wall,
+                              ctx=ctx, t_enq=t_enq))
             self._cv.notify()
         return True
 
@@ -160,16 +181,28 @@ class Gateway:
                     self._in_flight -= 1
                     self._cv.notify_all()
 
+    def _anomaly(self, kind: str, req: _Request) -> None:
+        """Count one anomaly and trigger the flight-recorder dump (the
+        last-N sampled traces + a metrics snapshot, JSONL on disk)."""
+        if self.tracer is not None:
+            self.tracer.anomaly(kind, fid=req.name, ctx=req.ctx)
+
     def _serve(self, req: _Request) -> None:
         p = self.params
         now = time.monotonic()
+        ctx = req.ctx
+        if ctx.sampled:
+            ctx.add_span("queue_wait", req.t_enq, trace_now())
         waited_trace = (now - req.sched_wall) * p.compress
         if p.slo_timeout_s is not None and waited_trace > p.slo_timeout_s:
             self.recorder.drop("slo_timeout")
+            self._anomaly("slo_violation", req)
+            ctx.finish("slo_timeout")
             return
         inv = req.inv
         try:
-            self.adapter.invoke(req.name, self.workload.args_for(inv))
+            self.adapter.invoke(req.name, self.workload.args_for(inv),
+                                ctx=ctx)
         except (HydraOOMError, FunctionNotRegisteredError) as e:
             # HydraOOM: the fleet is momentarily full (arena budgets
             # saturated by the burst) — back off and requeue, like the
@@ -181,31 +214,43 @@ class Gateway:
             # of failing a known function mid-migration.
             if waited_trace > p.max_wait_s:
                 self.recorder.drop("gave_up")
+                self._anomaly("oom_give_up", req)
+                ctx.finish("gave_up")
                 return
             req.retries += 1
             self.recorder.retried()
+            if isinstance(e, FunctionNotRegisteredError):
+                self._anomaly("migration_requeue", req)
             # hydralint: disable=HL002 — deliberate OOM retry backoff on a
             # worker thread, mirrors the sim engine's retry_backoff_s
             time.sleep(p.retry_backoff_s)
             tenant = self.workload.tenant_name(inv.tenant)
             with self._cv:
                 if not self._stop:
+                    if ctx.sampled:
+                        # a fresh queue_wait leg starts at the requeue
+                        # (the backoff above stays unattributed)
+                        req.t_enq = trace_now()
                     self._queues[tenant].appendleft(req)
                     self._cv.notify()
                 else:
                     self.recorder.error(e)
+                    ctx.finish("error")
             return
         except Exception as e:
             self.recorder.error(e)
+            ctx.finish("error")
             return
         # emulated function body: the trace's duration at compressed
         # wall time (the invoke above covered only the platform path)
         if inv.duration_s > 0:
-            # hydralint: disable=HL002 — the emulated function body IS the
-            # workload: the trace duration at compressed wall time
-            time.sleep(inv.duration_s / p.compress)
+            with ctx.span("body"):
+                # hydralint: disable=HL002 — the emulated function body IS
+                # the workload: the trace duration at compressed wall time
+                time.sleep(inv.duration_s / p.compress)
         latency_trace = (time.monotonic() - req.sched_wall) * p.compress
         self.recorder.record(latency_trace, inv.duration_s)
+        ctx.finish("ok")
 
     # ------------------------------------------------------------------
     def drain(self, timeout_s: float = 60.0) -> bool:

@@ -91,9 +91,13 @@ class CalibrationProbe:
     PLATFORM_COSTS = ("runtime_boot_s", "pool_claim_s", "restore_s")
     RUNTIME_COSTS = ("register_s", "arena.alloc_s")
 
-    def __init__(self, adapter, *, compress: float):
+    def __init__(self, adapter, *, compress: float, tracer=None):
         self.adapter = adapter
         self.compress = compress
+        # optional core.tracing.Tracer: its per-phase aggregates ride in
+        # the probe payload so calibration reports carry the span-level
+        # decomposition next to the histogram-window costs
+        self.tracer = tracer
         self._lock = threading.Lock()
         # keyed by the Metrics OBJECT (strong ref, identity hash): an
         # id()-keyed map would let a dead runtime's address be reused by
@@ -189,7 +193,7 @@ class CalibrationProbe:
             costs = {name: {"count": c, "sum": s, "mean": s / c}
                      for name, (c, s) in self._window_costs().items()}
         rss_vals = [b for _, b in rss]
-        return {
+        out = {
             "compress": self.compress,
             "wall_costs": costs,
             "rss": {
@@ -203,16 +207,23 @@ class CalibrationProbe:
             },
             "node_mem_peak_bytes": peaks,
         }
+        if self.tracer is not None:
+            # span-level wall-ms decomposition alongside the
+            # histogram-window costs (consumed by validate --attribute)
+            out["phases"] = self.tracer.summary()["phases"]
+        return out
 
 
 class Recorder:
     def __init__(self, adapter, *, compress: float,
                  sample_dt_s: float = 0.25,
-                 probe: Optional[CalibrationProbe] = None):
+                 probe: Optional[CalibrationProbe] = None,
+                 tracer=None):
         self.adapter = adapter
         self.compress = compress
         self.sample_dt_s = sample_dt_s
         self.probe = probe
+        self.tracer = tracer           # core.tracing.Tracer or None
         self._lock = threading.Lock()
         self._latencies: list = []
         self._overheads: list = []
@@ -357,10 +368,13 @@ class Recorder:
         exe = self.adapter.exe_stats()
         slab = self.adapter.slab_counts()
         with self._lock:
-            return {"drops": dict(self._drops),
-                    "retries": self._retries,
-                    "sample_failures": self._sample_failures,
-                    "errors": list(self._errors),
-                    "request_overhead_ms": overhead,
-                    "exe_cache": exe,
-                    "slab": slab}
+            out = {"drops": dict(self._drops),
+                   "retries": self._retries,
+                   "sample_failures": self._sample_failures,
+                   "errors": list(self._errors),
+                   "request_overhead_ms": overhead,
+                   "exe_cache": exe,
+                   "slab": slab}
+        if self.tracer is not None:
+            out["tracing"] = self.tracer.summary()
+        return out

@@ -22,6 +22,7 @@ import time
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.core.tracing import FlightRecorder, Tracer
 from repro.gateway.gateway import (Autoscaler, ClusterBalancer, Gateway,
                                    GatewayParams)
 from repro.gateway.loadgen import LoadGenerator, ShardedLoadGenerator
@@ -56,6 +57,14 @@ class ReplayConfig:
     balance_imbalance: float = 0.25    # commit spread / node budget trigger
     balance_min_queue: int = 1         # queued requests = live-burst signal
     balance_max_moves: int = 4         # migrations per rebalance() call
+    # request tracing (core/tracing): 0.0 = off (the gateway carries the
+    # zero-cost NULL_TRACE); >0 head-samples that fraction of admitted
+    # requests deterministically under trace_seed
+    trace_sample: float = 0.0
+    trace_seed: int = 0
+    trace_max: int = 4096              # bounded export window (traces kept)
+    flight_dir: Optional[str] = None   # anomaly flight-recorder output dir
+    flight_ring: int = 256             # last-N traces dumped per anomaly
 
 
 def _budget_of(adapter) -> Optional[int]:
@@ -124,12 +133,16 @@ def warm_executables(adapter, workload, trace) -> int:
     return warmed
 
 
-def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
+def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None,
+                 tracer: Optional[Tracer] = None):
     """Replay ``trace`` open-loop against ``target`` (a ``HydraRuntime``,
     ``HydraPlatform``, or ``HydraCluster``). Returns ``(SimResult,
     extras)`` — the result in the simulator's schema, plus live-only
     detail (drop reasons, invoke errors, load-generator lag, wall
-    time)."""
+    time). Pass ``tracer`` (or set ``cfg.trace_sample``/``flight_dir``)
+    to span-trace sampled requests; the caller keeps the tracer for
+    Chrome export, and ``extras["tracing"]`` carries the per-phase
+    aggregate either way."""
     cfg = cfg or ReplayConfig()
     adapter = wrap_target(target, cfg.runtime_base_bytes)
     workload = build_workload(adapter, cfg)
@@ -137,10 +150,24 @@ def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
     if cfg.warm_executables:
         warm_executables(adapter, workload, trace)
 
-    probe = CalibrationProbe(adapter, compress=cfg.compress) \
+    if tracer is None and (cfg.trace_sample > 0 or cfg.flight_dir):
+        flight = FlightRecorder(cfg.flight_dir, ring=cfg.flight_ring) \
+            if cfg.flight_dir else None
+        tracer = Tracer(cfg.trace_sample if cfg.trace_sample > 0 else 1.0,
+                        seed=cfg.trace_seed, max_traces=cfg.trace_max,
+                        flight=flight)
+    if tracer is not None:
+        # flight dumps embed a fleet snapshot taken at anomaly time
+        tracer.set_metrics_provider(
+            lambda: {"fleet": adapter.sample(),
+                     "counters": adapter.counters()})
+
+    probe = CalibrationProbe(adapter, compress=cfg.compress,
+                             tracer=tracer) \
         if cfg.probe else None
     recorder = Recorder(adapter, compress=cfg.compress,
-                        sample_dt_s=cfg.sample_dt_s, probe=probe)
+                        sample_dt_s=cfg.sample_dt_s, probe=probe,
+                        tracer=tracer)
     autoscaler = balancer = None
     if cfg.autoscale and adapter.kind == "platform":
         autoscaler = Autoscaler(target, pool_min=cfg.pool_min,
@@ -152,7 +179,7 @@ def replay_trace(trace, target, cfg: Optional[ReplayConfig] = None):
                                tenant_rate=cfg.tenant_rate,
                                tenant_burst=cfg.tenant_burst,
                                compress=cfg.compress),
-                 recorder, autoscaler=autoscaler)
+                 recorder, autoscaler=autoscaler, tracer=tracer)
     if cfg.balance and adapter.kind == "cluster":
         balancer = ClusterBalancer(target, gw,
                                    interval_s=cfg.balance_interval_s,

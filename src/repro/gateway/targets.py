@@ -41,8 +41,10 @@ class TargetAdapter:
         self.runtime_base = runtime_base_bytes
 
     # -- request path ------------------------------------------------------
-    def invoke(self, fid: str, args):
-        return self.target.invoke(fid, args)
+    def invoke(self, fid: str, args, ctx=None):
+        # ctx: the request's RequestTrace (or None/NULL_TRACE); every
+        # stack's invoke threads it down to the arena claim
+        return self.target.invoke(fid, args, ctx=ctx)
 
     def register(self, fid: str, spec, *, tenant: str,
                  mem_budget: Optional[int] = None) -> bool:

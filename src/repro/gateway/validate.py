@@ -53,9 +53,11 @@ import sys
 from typing import Optional
 
 from repro.core.calibrate import apply_calibration, calibration_from_replay
+from repro.core.metrics import DEFAULT_RESERVOIR
 from repro.core.platform import HydraPlatform, PlatformParams
 from repro.core.sim import SimParams, simulate
 from repro.core.traces import Trace, discover_azure_tables
+from repro.core.tracing import Tracer
 from repro.gateway.replay import ReplayConfig, replay_trace
 
 # enforced cold-start gate: |live - sim| <= COLD_ATOL + COLD_RTOL * sim
@@ -161,11 +163,15 @@ def run_validation(trace, *, compress: float = 60.0, pool_size: int = 4,
                    n_workers: int = 8,
                    sim_base: Optional[SimParams] = None,
                    round_trip: bool = False,
-                   cold_slack: int = ROUNDTRIP_COLD_SLACK) -> dict:
+                   cold_slack: int = ROUNDTRIP_COLD_SLACK,
+                   attribute: bool = False) -> dict:
     """Replay ``trace`` live and simulated; return the delta report.
     With ``round_trip=True``, additionally derive a calibration from the
     live run itself, re-simulate with it, and gate on the calibrated sim
-    tracking live at least as tightly as the uncalibrated sim."""
+    tracking live at least as tightly as the uncalibrated sim. With
+    ``attribute=True``, span-trace every live request and report which
+    phase dominates the latency tail and the cold requests — the
+    measured explanation behind any live-vs-sim p99/cold delta."""
     base = sim_base or SimParams()
     live_budget = runtime_budget or max(
         4 << 20, int(base.runtime_cap * mem_scale))
@@ -174,12 +180,14 @@ def run_validation(trace, *, compress: float = 60.0, pool_size: int = 4,
     # compressed replay and every burst OOMs
     platform = HydraPlatform(PlatformParams(
         pool_size=pool_size, runtime_budget_bytes=live_budget,
-        arena_ttl_s=base.isolate_ttl_s / compress, n_workers=4))
+        arena_ttl_s=base.isolate_ttl_s / compress, n_workers=4,
+        hist_max_samples=DEFAULT_RESERVOIR))
     cfg = ReplayConfig(compress=compress, mem_scale=mem_scale,
                        n_workers=n_workers, autoscale=False,
                        slo_timeout_s=None, tenant_rate=None)
+    tracer = Tracer(1.0, seed=0) if attribute else None
     try:
-        live, extras = replay_trace(trace, platform, cfg)
+        live, extras = replay_trace(trace, platform, cfg, tracer=tracer)
     finally:
         platform.shutdown()
 
@@ -242,6 +250,8 @@ def run_validation(trace, *, compress: float = 60.0, pool_size: int = 4,
                       "passed": cold["passed"]},
         "gates": {"cold_runtime": cold, "p99_s": p99},
     }
+    if tracer is not None:
+        report["attribution"] = tracer.attribution()
 
     if round_trip:
         try:
@@ -316,6 +326,19 @@ def format_report(report: dict) -> str:
         measured = report["calibration"]["measured"]
         lines.append("calibration: " + ", ".join(
             f"{k}={v:.4g}" for k, v in sorted(measured.items())))
+    attr = report.get("attribution")
+    if attr:
+        for label, key in (("p99 tail", "p99"), ("cold", "cold")):
+            g = attr.get(key)
+            if not g:
+                lines.append(f"attribution {label}: no sampled requests "
+                             "in this group")
+                continue
+            dom = g["dominant"]
+            lines.append(
+                f"attribution {label}: dominant phase {dom} "
+                f"(mean {g['phase_mean_ms'].get(dom, 0.0):.2f}ms wall "
+                f"over {g['n']} requests)")
     for f in report["failures"]:
         lines.append(f"FAIL: {f}")
     return "\n".join(lines)
@@ -361,6 +384,11 @@ def main(argv=None) -> int:
                          "re-simulate with it, and require the "
                          "calibrated sim to track live at least as "
                          "tightly as the uncalibrated sim")
+    ap.add_argument("--attribute", action="store_true",
+                    help="span-trace every live request and report the "
+                         "phase (queue_wait, pool_claim, register, "
+                         "arena_acquire, ...) dominating the latency "
+                         "tail and the cold requests")
     ap.add_argument("--emit-calibration", default=None, metavar="PATH",
                     help="with --round-trip: also write the derived "
                          "hydra-calibration/v1 JSON here")
@@ -386,7 +414,8 @@ def main(argv=None) -> int:
                             atol=args.atol, rtol=args.rtol,
                             p99_atol_wall=args.p99_atol_wall,
                             p99_rtol=args.p99_rtol,
-                            round_trip=args.round_trip)
+                            round_trip=args.round_trip,
+                            attribute=args.attribute)
     print(format_report(report))
     if args.emit_calibration and "calibration" in report:
         from repro.core.calibrate import write_calibration_doc

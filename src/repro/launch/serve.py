@@ -216,6 +216,28 @@ def main(argv=None):
                          "uncalibrated sim (repro.gateway.validate; "
                          "always validates the single-node platform "
                          "stack, so --nodes is ignored)")
+    ap.add_argument("--attribute", action="store_true",
+                    help="with --round-trip: trace the live leg and "
+                         "report which request phase dominates the "
+                         "live-vs-sim cold and p99 deltas "
+                         "(repro.core.tracing attribution)")
+    # ---- request tracing (gateway mode; repro.core.tracing) ----
+    ap.add_argument("--trace-out", default=None,
+                    help="write sampled request spans as Chrome "
+                         "trace-event JSON to this path after the "
+                         "replay (load in Perfetto / chrome://tracing; "
+                         "gateway mode)")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    help="head-sampling rate for request tracing in "
+                         "[0,1] (gateway mode; default 1.0 when "
+                         "--trace-out/--flight-recorder is given, else "
+                         "tracing stays off)")
+    ap.add_argument("--flight-recorder", default=None, dest="flight_dir",
+                    metavar="DIR",
+                    help="keep a ring of recent request traces and dump "
+                         "them with a fleet snapshot as JSONL under DIR "
+                         "on each anomaly (SLO drop, OOM give-up, "
+                         "migration requeue; gateway mode)")
     args = ap.parse_args(argv)
 
     if args.tcmalloc:
@@ -230,11 +252,30 @@ def main(argv=None):
                         ("--target-rps", args.target_rps is not None),
                         ("--max-minutes", args.max_minutes is not None),
                         ("--slo-timeout", args.slo_timeout is not None),
-                        ("--tenant-rate", args.tenant_rate is not None)]
+                        ("--tenant-rate", args.tenant_rate is not None),
+                        ("--attribute", args.attribute),
+                        ("--trace-out", args.trace_out is not None),
+                        ("--trace-sample", args.trace_sample is not None),
+                        ("--flight-recorder", args.flight_dir is not None)]
         used = [flag for flag, on in gateway_only if on]
         if used:
             ap.error(f"{', '.join(used)} require(s) --gateway "
                      f"(open-loop trace replay mode)")
+
+    if args.round_trip:
+        # the validation loop owns its own tracer (--attribute); the raw
+        # span-export flags only make sense on a plain gateway replay
+        trace_flags = [("--trace-out", args.trace_out is not None),
+                       ("--trace-sample", args.trace_sample is not None),
+                       ("--flight-recorder", args.flight_dir is not None)]
+        used = [flag for flag, on in trace_flags if on]
+        if used:
+            ap.error(f"{', '.join(used)} cannot be combined with "
+                     f"--round-trip (use --attribute for phase "
+                     f"attribution of the validation deltas)")
+    elif args.attribute:
+        ap.error("--attribute requires --round-trip (it attributes the "
+                 "live-vs-sim validation deltas)")
 
     if args.gateway:
         return run_gateway(args)
@@ -360,7 +401,8 @@ def run_gateway(args) -> dict:
                                 pool_size=max(args.pool, 1),
                                 mem_scale=args.mem_scale,
                                 n_workers=args.gw_workers,
-                                round_trip=True)
+                                round_trip=True,
+                                attribute=args.attribute)
         print(format_report(report))
         if args.calibration and "calibration" in report:
             from repro.core.calibrate import write_calibration_doc
@@ -378,13 +420,22 @@ def run_gateway(args) -> dict:
     target = build_target(
         args, arena_ttl_s=SimParams().isolate_ttl_s / args.compress)
 
+    tracer = None
+    if (args.trace_out is not None or args.trace_sample is not None
+            or args.flight_dir is not None):
+        from repro.core.tracing import FlightRecorder, Tracer
+        flight = FlightRecorder(args.flight_dir) \
+            if args.flight_dir is not None else None
+        rate = 1.0 if args.trace_sample is None else args.trace_sample
+        tracer = Tracer(rate, seed=args.seed, flight=flight)
+
     cfg = ReplayConfig(compress=args.compress, mem_scale=args.mem_scale,
                        n_workers=args.gw_workers,
                        queue_depth=args.queue_depth,
                        slo_timeout_s=args.slo_timeout,
                        tenant_rate=args.tenant_rate)
     try:
-        res, extras = replay_trace(trace, target, cfg)
+        res, extras = replay_trace(trace, target, cfg, tracer=tracer)
     finally:
         target.shutdown()
 
@@ -406,6 +457,22 @@ def run_gateway(args) -> dict:
               f"{b['transfer_s']:.3f}s")
     if extras["errors"]:
         print(f"[gateway] errors (sample): {extras['errors'][:3]}")
+    if tracer is not None:
+        from repro.core.tracing import export_chrome
+        ts = tracer.summary()
+        print(f"[gateway] tracing: sampled {ts['sampled']}/"
+              f"{ts['requests']} requests, "
+              f"{sum(ts['anomalies'].values())} anomalies")
+        if args.trace_out is not None:
+            doc = export_chrome(tracer, args.trace_out,
+                                meta={"trace_file": args.trace_file,
+                                      "compress": args.compress})
+            print(f"[gateway] wrote {len(doc['traceEvents'])} trace "
+                  f"events to {args.trace_out} (load in Perfetto or "
+                  f"chrome://tracing)")
+        if args.flight_dir is not None and "flight" in ts:
+            print(f"[gateway] flight recorder: {ts['flight']['dumps']} "
+                  f"dump(s) under {args.flight_dir}")
     if args.calibration:
         from repro.core.calibrate import (calibration_from_replay,
                                           write_calibration_doc)

@@ -130,14 +130,18 @@ def test_check_against_flags_ordering_regression(artifact):
 # ---------------------------------------------------------------------------
 FAKE_RESULT = {"arena_us": {"zeroed_reuse": {"mean": 120.0},
                             "donated_reuse": {"mean": 3.0}},
-               "invoke_ms": {"mean": 0.5, "p99": 1.2}}
+               "invoke_ms": {"mean": 0.5, "p99": 1.2},
+               "invoke_traced_ms": {"off_delta_mean": 0.001,
+                                    "on": {"mean": 0.6}}}
 
 
 def test_check_budget_logic():
     ok = {"budgets": {"warm_invoke_ms_mean": 2.0,
                       "warm_invoke_ms_p99": 10.0,
                       "arena_zeroed_reuse_us_mean": 3000.0,
-                      "arena_donated_reuse_us_mean": 500.0}}
+                      "arena_donated_reuse_us_mean": 500.0,
+                      "tracing_off_delta_ms_mean": 0.25,
+                      "traced_invoke_ms_mean": 4.0}}
     assert bench_hotpath.check_budget(FAKE_RESULT, ok) == []
     tight = {"budgets": {"warm_invoke_ms_mean": 0.1}}
     errs = bench_hotpath.check_budget(FAKE_RESULT, tight)
@@ -155,7 +159,9 @@ def test_committed_budget_keys_all_gateable():
     # zero-overhead result passes all of them)
     zero = {"arena_us": {"zeroed_reuse": {"mean": 0.0},
                          "donated_reuse": {"mean": 0.0}},
-            "invoke_ms": {"mean": 0.0, "p99": 0.0}}
+            "invoke_ms": {"mean": 0.0, "p99": 0.0},
+            "invoke_traced_ms": {"off_delta_mean": 0.0,
+                                 "on": {"mean": 0.0}}}
     assert bench_hotpath.check_budget(zero, doc) == []
 
 

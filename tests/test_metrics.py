@@ -111,3 +111,83 @@ def test_empty_histogram_snapshot_is_nan_not_crash():
     assert s["count"] == 0
     assert math.isnan(s["mean"]) and math.isnan(s["p99"])
     assert math.isnan(h.percentile(50)) and math.isnan(h.mean)
+
+
+# ---------------------------------------------------------------------------
+# bounded reservoir mode (max_samples)
+# ---------------------------------------------------------------------------
+def test_reservoir_exact_below_threshold():
+    h = Histogram(max_samples=100)
+    for i in range(100):
+        h.observe(float(i))
+    # under the bound the histogram is exact: every value retained
+    assert sorted(h._vals) == [float(i) for i in range(100)]
+    assert h.count == 100 and h.sum == sum(range(100))
+    assert abs(h.percentile(50) - 49.5) < 1e-9
+
+
+def test_reservoir_bounds_memory_but_keeps_exact_count_sum():
+    h = Histogram(max_samples=64, seed=1)
+    n = 10_000
+    for i in range(n):
+        h.observe(float(i))
+    assert len(h._vals) == 64                 # bounded, not unbounded
+    assert h.count == n                       # running totals stay exact
+    assert h.sum == float(sum(range(n)))
+    assert abs(h.mean - (n - 1) / 2) < 1e-9
+    c, s = h.count_sum()                      # the probe's atomic pair
+    assert (c, s) == (n, float(sum(range(n))))
+    snap = h.snapshot()
+    assert snap["count"] == n                 # snapshot count exact too
+    assert abs(snap["mean"] - (n - 1) / 2) < 1e-9
+    # quantiles are estimates from a uniform sample of the stream: for
+    # 10k uniform values and k=64 they land well inside the bulk
+    assert 0.0 <= snap["p50"] <= n
+    q = sorted(h._vals)[len(h._vals) // 2]
+    assert 0.1 * n < q < 0.9 * n
+
+
+def test_reservoir_is_seed_deterministic():
+    def fill(seed):
+        h = Histogram(max_samples=32, seed=seed)
+        for i in range(1000):
+            h.observe(float(i))
+        return list(h._vals)
+
+    assert fill(7) == fill(7)
+    assert fill(7) != fill(8)
+
+
+def test_reservoir_rejects_nonpositive_bound():
+    import pytest
+    with pytest.raises(ValueError):
+        Histogram(max_samples=0)
+    with pytest.raises(ValueError):
+        Histogram(max_samples=-1)
+
+
+def test_metrics_propagates_reservoir_bound_to_new_hists():
+    m = Metrics(hist_max_samples=16)
+    for i in range(500):
+        m.observe("lat", float(i))
+    assert len(m.hists["lat"]._vals) == 16
+    assert m.hists["lat"].count == 500
+    # default Metrics stays exact/unbounded (sim + calibration paths)
+    m2 = Metrics()
+    for i in range(500):
+        m2.observe("lat", float(i))
+    assert len(m2.hists["lat"]._vals) == 500
+
+
+def test_reservoir_hammer_exact_totals_under_threads():
+    with locksan.sanitized():
+        h = Histogram(max_samples=32)
+
+        def work(i):
+            for _ in range(N_OPS):
+                h.observe(1.0)
+
+        _run_threads(work)
+    assert h.count == N_THREADS * N_OPS
+    assert h.sum == float(N_THREADS * N_OPS)
+    assert len(h._vals) == 32

@@ -21,6 +21,7 @@ Checkers (see ``docs/development.md`` for rationale + history):
   HL005  adapter conformance   tools/hydralint/adapters.py
   HL006  docs references       tools/hydralint/docsref.py
   HL007  argparse hygiene      tools/hydralint/clihygiene.py
+  HL008  span discipline       tools/hydralint/spans.py
 
 Suppression: append ``# hydralint: disable=HL00X`` (comma-separate for
 several codes) to the offending line, with a short justification in the
@@ -226,7 +227,7 @@ def _scope_disables(sf: SourceFile, node, qualname: str) -> None:
 
 def all_checkers():
     from tools.hydralint import (adapters, clihygiene, determinism, docsref,
-                                 lockcheck, purity, vocab)
+                                 lockcheck, purity, spans, vocab)
     return [
         ("HL001", lockcheck.check),
         ("HL002", purity.check),
@@ -235,6 +236,7 @@ def all_checkers():
         ("HL005", adapters.check),
         ("HL006", docsref.check),
         ("HL007", clihygiene.check),
+        ("HL008", spans.check),
     ]
 
 

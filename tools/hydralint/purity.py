@@ -61,6 +61,10 @@ RESOLVE_STOPLIST = {
     "sort", "setdefault", "format", "strip", "startswith", "endswith",
     "encode", "decode", "discard", "remove", "clear", "count", "index",
     "wait", "notify", "notify_all", "set", "is_set", "start",
+    # finish: RequestTrace/_NullTrace (hot-path span close, pure),
+    # Recorder, CalibrationProbe, LoadResult... — too many unrelated
+    # implementations to resolve an attr call by name alone
+    "finish",
 }
 
 
