@@ -14,8 +14,10 @@ from repro.launch.train import main as train_main
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=300,
+                    help="training steps to run (default: 300)")
+    ap.add_argument("--arch", default="qwen2.5-3b",
+                    help="model architecture preset (default: qwen2.5-3b)")
     args = ap.parse_args()
     ckpt = tempfile.mkdtemp(prefix="hydra_train_ck_")
     # reduced qwen2.5 config (~2M params on CPU); scale dims up on real HW

@@ -109,10 +109,12 @@ class ArenaPool:
             return
         if buffer_specs is None:
             arena = self.acquire(signature, factory)
-            buffer_specs = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
-                arena.buffers)
-            self.release(arena)
+            try:
+                buffer_specs = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    arena.buffers)
+            finally:
+                self.release(arena)
         zeroer = self._compile_zeroer(signature, buffer_specs)
         with self._lock:
             self._zeroers.setdefault(signature, zeroer)

@@ -372,9 +372,9 @@ class Tracer:
             return NULL_TRACE
         with self._lock:
             i = self._index
-            self._index += 1
             take = (self.sample_rate >= 1.0
                     or _mix64(self.seed, i) / 2.0**64 < self.sample_rate)
+            self._index += 1
             if take:
                 self._sampled += 1
         if not take:

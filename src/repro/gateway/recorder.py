@@ -119,20 +119,25 @@ class CalibrationProbe:
 
     def begin(self) -> None:
         """Snapshot histogram state at replay start; window deltas are
-        measured against this."""
+        measured against this.  The snapshot is taken into locals first
+        so a failing adapter probe cannot leave the baseline half
+        written (HL010)."""
+        baseline = {}
+        for m in self.adapter.platform_metrics():
+            baseline[m] = self._hist_state(m, self.PLATFORM_COSTS)
+        for m in self.adapter.runtime_metrics():
+            baseline[m] = self._hist_state(m, self.RUNTIME_COSTS)
+        rss0 = _process_rss_bytes()
+        runtimes0 = self.adapter.sample().get("runtimes", 0)
+        n_nodes = self.adapter.n_nodes
         with self._lock:
             self._baseline.clear()
-            for m in self.adapter.platform_metrics():
-                self._baseline[m] = self._hist_state(m,
-                                                     self.PLATFORM_COSTS)
-            for m in self.adapter.runtime_metrics():
-                self._baseline[m] = self._hist_state(m,
-                                                     self.RUNTIME_COSTS)
-            self._rss0 = _process_rss_bytes()
-            self._runtimes0 = self.adapter.sample().get("runtimes", 0)
+            self._baseline.update(baseline)
+            self._rss0 = rss0
+            self._runtimes0 = runtimes0
             self._rss.clear()
             self._per_runtime.clear()
-            self._node_peaks = [0] * self.adapter.n_nodes
+            self._node_peaks = [0] * n_nodes
 
     def sample(self, t_trace: float, fleet: dict) -> None:
         """One grid sample (called from the recorder's sampler thread

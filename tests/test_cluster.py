@@ -11,7 +11,7 @@ from repro.core import (AdaptivePoolPolicy, ArrivalRateEstimator,
 from repro.core.platform import estimate_bytes
 from repro.core.tracesim import (SimParams, gen_trace, simulate,
                                  simulate_partitioned)
-from tools.hydralint import locksan
+from tools.hydralint import leaksan, locksan
 
 MB = 1 << 20
 GB = 1 << 30
@@ -131,7 +131,8 @@ def test_rebalance_drains_overloaded_node(tmp_path):
     need = estimate_bytes(spec())
     # locksan: rebalance nests the cluster lock over per-node platform,
     # budget, and metrics locks — the order graph must stay acyclic.
-    with locksan.sanitized():
+    # leaksan: snapshot-evict-restore moves must not strand runtime claims.
+    with locksan.sanitized(), leaksan.sanitized():
         cl = make_cluster(tmp_path, node_memory_bytes=8 * need)
         try:
             # all one tenant: colocation piles everything onto one node

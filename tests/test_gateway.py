@@ -19,7 +19,7 @@ from repro.gateway import (Autoscaler, ClusterBalancer, Gateway,
                            sim_params_for_live, wrap_target)
 from repro.gateway.replay import build_workload
 from repro.gateway.validate import gate, round_trip_check
-from tools.hydralint import locksan
+from tools.hydralint import leaksan, locksan
 
 MB = 1 << 20
 
@@ -44,7 +44,9 @@ def test_replay_emits_simresult_schema_and_full_accounting():
     # locksan: the full replay stack (gateway workers, recorder sampler,
     # platform janitor) runs under the lock-order sanitizer — the platform
     # is built inside the patch so every lock it creates is wrapped.
-    with locksan.sanitized():
+    # leaksan: every arena/runtime/trace claim made by the replay must be
+    # returned by the time the platform finishes shutting down.
+    with locksan.sanitized(), leaksan.sanitized():
         trace = make_trace(n=24, gap_s=0.4)
         plat = small_platform(compress=30.0)
         try:

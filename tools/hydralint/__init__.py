@@ -22,6 +22,15 @@ Checkers (see ``docs/development.md`` for rationale + history):
   HL006  docs references       tools/hydralint/docsref.py
   HL007  argparse hygiene      tools/hydralint/clihygiene.py
   HL008  span discipline       tools/hydralint/spans.py
+  HL009  resource lifecycle    tools/hydralint/lifecycle.py
+  HL010  lock exception safety tools/hydralint/exsafety.py
+  HL011  accounting parity     tools/hydralint/parity.py
+
+HL009/HL010 run on the shared exception-aware dataflow engine in
+``tools/hydralint/flow.py`` (CFG with exception edges + interprocedural
+summaries over the HL002 call graph).  The runtime companions are
+``locksan`` (lock-order) and ``leaksan`` (resource leaks), armed inside
+the tier-1 concurrency tests.
 
 Suppression: append ``# hydralint: disable=HL00X`` (comma-separate for
 several codes) to the offending line, with a short justification in the
@@ -227,7 +236,8 @@ def _scope_disables(sf: SourceFile, node, qualname: str) -> None:
 
 def all_checkers():
     from tools.hydralint import (adapters, clihygiene, determinism, docsref,
-                                 lockcheck, purity, spans, vocab)
+                                 exsafety, lifecycle, lockcheck, parity,
+                                 purity, spans, vocab)
     return [
         ("HL001", lockcheck.check),
         ("HL002", purity.check),
@@ -237,6 +247,9 @@ def all_checkers():
         ("HL006", docsref.check),
         ("HL007", clihygiene.check),
         ("HL008", spans.check),
+        ("HL009", lifecycle.check),
+        ("HL010", exsafety.check),
+        ("HL011", parity.check),
     ]
 
 

@@ -1,17 +1,39 @@
 """CLI: ``python -m tools.hydralint src/ tests/ [--baseline FILE]``.
 
 Exit codes: 0 clean (or fully baselined), 1 findings / baseline
-violations, 2 usage error.  Run from the repo root.
+violations / budget overrun, 2 usage error.  Run from the repo root.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
+import time
 from pathlib import Path
 
 from tools.hydralint import (all_checkers, load_baseline, run_lint,
                              write_baseline)
+
+
+def explain(code: str, root: Path) -> str:
+    """The invariant-table entry for ``code``: the ``### HL00X — ...``
+    section of docs/development.md (rationale, historical bug, how to
+    suppress), falling back to the checker module's docstring."""
+    doc = root / "docs" / "development.md"
+    if doc.exists():
+        text = doc.read_text(encoding="utf-8")
+        m = re.search(rf"^### {code}[^\n]*\n(.*?)(?=^#{{2,3}} |\Z)",
+                      text, re.M | re.S)
+        if m:
+            return (m.group(0).rstrip() + "\n")
+    import importlib
+
+    for ck_code, fn in all_checkers():
+        if ck_code == code:
+            mod = importlib.import_module(fn.__module__)
+            return (mod.__doc__ or f"{code}: no documentation").strip() + "\n"
+    return f"{code}: unknown checker code\n"
 
 
 def main(argv=None) -> int:
@@ -19,7 +41,7 @@ def main(argv=None) -> int:
         prog="python -m tools.hydralint",
         description="Repo-specific static analysis for the Hydra "
                     "reproduction (see docs/development.md).")
-    parser.add_argument("paths", nargs="+",
+    parser.add_argument("paths", nargs="*",
                         help="files or directories to lint (e.g. src/ tests/)")
     parser.add_argument("--root", default=".",
                         help="project root for relative paths and docs "
@@ -36,9 +58,27 @@ def main(argv=None) -> int:
                              "(default: all)")
     parser.add_argument("--json", action="store_true", dest="as_json",
                         help="emit findings as JSON instead of text")
+    parser.add_argument("--format", choices=("text", "github"),
+                        default="text", dest="fmt",
+                        help="finding output format: 'github' emits "
+                             "::error workflow annotations that surface "
+                             "inline on the PR diff (default: text)")
+    parser.add_argument("--explain", metavar="HL00X", default=None,
+                        help="print the invariant-table entry for a checker "
+                             "code (rationale, historical bug, suppression) "
+                             "and exit")
+    parser.add_argument("--budget", metavar="FILE", default=None,
+                        help="lint-speed gate: fail if the full sweep's wall "
+                             "time exceeds the committed 'lint' budget in "
+                             "FILE (benchmarks/data/overhead_budget.json)")
     args = parser.parse_args(argv)
 
     root = Path(args.root).resolve()
+    if args.explain:
+        sys.stdout.write(explain(args.explain.strip(), root))
+        return 0
+    if not args.paths:
+        parser.error("no paths to lint (or use --explain HL00X)")
     select = None
     if args.select:
         select = {c.strip() for c in args.select.split(",") if c.strip()}
@@ -47,7 +87,9 @@ def main(argv=None) -> int:
         if bad:
             parser.error(f"unknown checker code(s): {', '.join(sorted(bad))}")
 
+    t0 = time.perf_counter()
     result = run_lint(args.paths, root, select=select)
+    sweep_s = time.perf_counter() - t0
 
     if args.write_baseline:
         write_baseline(args.write_baseline, result.findings)
@@ -68,7 +110,13 @@ def main(argv=None) -> int:
         }, indent=2))
     else:
         for f in new:
-            print(f.render())
+            if args.fmt == "github":
+                # one workflow annotation per finding; the annotation body
+                # must stay single-line, so detail rides in the title
+                print(f"::error file={f.path},line={f.line},col={f.col},"
+                      f"title={f.code} {f.detail}::{f.message}")
+            else:
+                print(f.render())
         for k in stale:
             print(f"baseline: stale entry {k!r} no longer matches any "
                   f"finding — remove it (the baseline may only shrink)")
@@ -79,7 +127,22 @@ def main(argv=None) -> int:
         else:
             print(f"[hydralint] {len(new)} new finding(s), {len(stale)} "
                   f"stale baseline entr(y/ies)", file=sys.stderr)
-    return 1 if (new or stale) else 0
+
+    over_budget = False
+    if args.budget:
+        doc = json.loads(Path(args.budget).read_text(encoding="utf-8"))
+        limit = float(doc.get("lint", {}).get("hydralint_sweep_s", 0) or 0)
+        if limit <= 0:
+            parser.error(f"{args.budget} has no lint.hydralint_sweep_s "
+                         "budget")
+        over_budget = sweep_s > limit
+        status = "OVER" if over_budget else "ok"
+        line = (f"[hydralint] sweep took {sweep_s:.2f}s against a "
+                f"{limit:.2f}s budget — {status}")
+        if args.fmt == "github" and over_budget:
+            print(f"::error title=hydralint budget::{line}")
+        print(line, file=sys.stderr if over_budget else sys.stdout)
+    return 1 if (new or stale or over_budget) else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,206 @@
+"""HL010 — exception safety under locks: no partial state on raise.
+
+History: PR 4's ``_try_admit`` admitted optimistically — it set
+``rec.runtime = rt`` under the platform lock, then the placement path
+called ``rt.register_function(...)``; when registration raised, every
+later cleanup write was skipped and the record stayed half-admitted
+(claimed runtime, no registration), corrupting the density accounting
+until PR 4 added the ``except BaseException: rec.runtime = None;
+raise`` rollback by hand.  This checker machine-checks the class.
+
+The shape flagged: inside a held-lock region (``with <lock>:``), a
+state mutation **W1** (attribute/subscript write or container-mutator
+call on an attribute), then a call **C** that can plausibly raise
+(``flow.raising_calls``), then a further state mutation **W2** on the
+same path.  If C raises, W1 is committed and W2 never happens — the
+multi-field update tears.  Not flagged:
+
+* W1 writes a bare constant (``rec.runtime = None`` is itself a
+  rollback/reset — there is no partial state to tear);
+* C sits inside a ``try`` whose handlers or ``finally`` write W1's
+  target back (the PR 4 fix shape);
+* local-variable writes (locals die with the frame — nothing shared
+  tears).
+
+Fix by reordering (do the raising work before the first mutation),
+or by adding the rollback handler.  Suppress with ``# hydralint:
+disable=HL010`` plus a justification when the intervening call is
+provably non-raising.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.hydralint import Finding, Project, dotted_name
+from tools.hydralint import flow
+
+CODE = "HL010"
+
+# with-context receivers that mean "a lock is held"
+_LOCK_HINTS = ("lock", "_cv", "cv", "mutex")
+
+_MUTATORS = {"append", "add", "extend", "insert", "appendleft", "put",
+             "put_nowait", "setdefault", "update", "pop", "popleft",
+             "remove", "discard", "clear"}
+
+
+def _is_lockish_ctx(expr) -> bool:
+    if isinstance(expr, ast.Call):       # e.g. with self._lock_for(x):
+        expr = expr.func
+    name = dotted_name(expr)
+    if name is None:
+        return False
+    leaf = name.split(".")[-1].lower()
+    return any(h in leaf for h in _LOCK_HINTS)
+
+
+def _write_keys(stmt, constant_ok: bool = True) -> list:
+    """State-mutation keys ``(base, attr)`` in one statement: attribute
+    or subscript-of-attribute assignments, and container-mutator calls
+    on attributes.  ``constant_ok=False`` drops writes of bare
+    constants (resets), which cannot tear."""
+    out = []
+
+    def target_key(t) -> Optional[tuple]:
+        while isinstance(t, ast.Subscript):
+            t = t.value
+        if isinstance(t, ast.Attribute):
+            base = dotted_name(t.value)
+            if base is not None:
+                return (base, t.attr)
+        return None
+
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Assign):
+            if not constant_ok and isinstance(node.value, ast.Constant):
+                continue
+            for t in node.targets:
+                k = target_key(t)
+                if k is not None:
+                    out.append(k)
+        elif isinstance(node, ast.AugAssign):
+            k = target_key(node.target)
+            if k is not None:
+                out.append(k)
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _MUTATORS:
+            k = target_key(node.func.value)
+            if k is not None and (node.args or node.keywords):
+                out.append(k)
+    return out
+
+
+class _RegionScan:
+    """Ordered scan of one held-lock region, branch-sensitive (if/else
+    arms scanned independently from a copy of the incoming state, then
+    merged) and loop-body-once (under-approximate)."""
+
+    def __init__(self, sf, fi, aliases):
+        self.sf = sf
+        self.fi = fi
+        self.aliases = aliases
+        self.findings: list = []
+        self.flagged: set = set()
+
+    def scan(self, stmts, writes: set, pending: list,
+             protected: frozenset):
+        for s in stmts:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+                continue
+            if isinstance(s, ast.If):
+                w1 = set(writes)
+                p1 = list(pending)
+                self.scan(s.body, w1, p1, protected)
+                w2 = set(writes)
+                p2 = list(pending)
+                self.scan(s.orelse, w2, p2, protected)
+                writes |= w1 | w2
+                pending[:] = p1 + [p for p in p2 if p not in p1]
+                continue
+            if isinstance(s, (ast.While, ast.For, ast.AsyncFor)):
+                self.scan(s.body, writes, pending, protected)
+                self.scan(s.orelse, writes, pending, protected)
+                continue
+            if isinstance(s, (ast.With, ast.AsyncWith)):
+                self.scan(s.body, writes, pending, protected)
+                continue
+            if isinstance(s, ast.Try):
+                rollback = frozenset(
+                    k for h in s.handlers for st in h.body
+                    for k in _write_keys(st)) | frozenset(
+                    k for st in s.finalbody for k in _write_keys(st))
+                self.scan(s.body, writes, pending,
+                          protected | rollback)
+                self.scan(s.orelse, writes, pending, protected)
+                for h in s.handlers:
+                    self.scan(h.body, set(writes), list(pending),
+                              protected)
+                self.scan(s.finalbody, writes, pending, protected)
+                continue
+            self.simple(s, writes, pending, protected)
+
+    def simple(self, s, writes: set, pending: list,
+               protected: frozenset):
+        # Flag pending calls from STRICTLY EARLIER statements before
+        # arming this statement's own calls: a mutator call is its own
+        # write (``self._q[k].appendleft(x)``) and cannot tear against
+        # itself.
+        w_armed = _write_keys(s, constant_ok=False)
+        w_all = _write_keys(s)
+        if w_all:
+            for c, exposed in pending:
+                key = id(c)
+                if key in self.flagged:
+                    continue
+                self.flagged.add(key)
+                w1 = ", ".join(sorted(f"{b}.{a}" for b, a in exposed))
+                w2 = ", ".join(sorted({f"{b}.{a}" for b, a in w_all}))
+                label = dotted_name(c.func) or "<call>"
+                self.findings.append(Finding(
+                    CODE, self.sf.path, c.lineno, c.col_offset,
+                    f"{label}() may raise between state writes under a "
+                    f"held lock in {self.fi.qualname}() — {w1} would "
+                    f"stay committed while {w2} never happens; reorder "
+                    f"or add a rollback except/finally",
+                    f"{self.fi.qualname}:{label}:"
+                    + "+".join(sorted(a for _b, a in exposed))))
+            pending.clear()
+        for c in flow.raising_calls(s, self.aliases):
+            exposed = {w for w in writes if w not in protected}
+            if exposed:
+                pending.append((c, frozenset(exposed)))
+        writes.update(w_armed)
+
+
+def _own_withs(fn) -> list:
+    """With statements in a function body, not descending into nested
+    function/class scopes (those are scanned as their own functions)."""
+    out: list = []
+    todo = list(fn.body)
+    while todo:
+        node = todo.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            out.append(node)
+        todo.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def check(project: Project) -> list:
+    fg = flow.FlowGraph(project)
+    findings = []
+    for sf, fi in project.iter_funcs():
+        aliases = fg.aliases(sf.path)
+        scan = _RegionScan(sf, fi, aliases)
+        for node in _own_withs(fi.node):
+            if not any(_is_lockish_ctx(i.context_expr)
+                       for i in node.items):
+                continue
+            scan.scan(node.body, set(), [], frozenset())
+        findings.extend(scan.findings)
+    return findings

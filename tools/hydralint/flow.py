@@ -1,0 +1,478 @@
+"""Shared exception-aware dataflow engine for hydralint checkers.
+
+The HL001–HL008 checkers are per-function syntactic walks; the bug
+classes PR 4/5/8 fixed by hand (exception-unsafe ``_try_admit``
+rollback, leaked claims on error paths) are *flow* properties: what
+happens on the paths an exception takes.  This module provides the two
+layers those checkers kept re-implementing badly or not at all:
+
+* :func:`build_cfg` — an intraprocedural control-flow graph over a
+  function body with explicit **exception edges**: every statement has
+  normal successors (``succ``) and exceptional successors (``esucc``)
+  leading to the matching ``except`` dispatch, through ``finally``
+  blocks (duplicated per continuation, so a normal path through a
+  ``finally`` is never conflated with an exceptional one), through
+  ``with`` exits, and ultimately to the function's virtual ``raise``
+  node.  ``return``/``break``/``continue`` are threaded through
+  enclosing ``finally`` blocks the way the runtime threads them.
+
+* :class:`Summaries` — an interprocedural may-summary layer over the
+  same call-graph resolution HL002 uses (``purity._Graph``): a checker
+  supplies a *direct* per-function summary extractor and the class runs
+  the fixpoint so one-line helper wrappers (``def _teardown(self, rt):
+  self._return_runtime(rt)``) are understood at their call sites.
+
+Checkers built on top: HL009 (resource lifecycle, ``lifecycle.py``)
+and HL010 (exception safety under locks, ``exsafety.py``).  The CFG is
+deliberately over-approximate — extra edges, never missing ones —
+except that exception edges are only *followed* by analyses for
+statements that contain a call that can plausibly raise
+(:func:`raising_calls`); ``x = a`` does not manufacture a phantom
+error path.
+"""
+from __future__ import annotations
+
+import ast
+from collections import namedtuple
+from typing import Callable, Optional
+
+from tools.hydralint import dotted_name
+from tools.hydralint.purity import RESOLVE_STOPLIST, _Graph, _import_aliases
+
+__all__ = ["CFG", "CFGNode", "build_cfg", "raising_calls", "Summaries",
+           "FlowGraph"]
+
+
+# ---------------------------------------------------------------------------
+# CFG
+
+class CFGNode:
+    """One CFG node.  ``kind`` is ``entry``/``exit``/``raise`` for the
+    virtual boundary nodes, a statement kind otherwise.  ``stmt`` is the
+    originating AST node (shared by the virtual nodes a compound
+    statement expands into)."""
+
+    __slots__ = ("idx", "stmt", "kind", "succ", "esucc")
+
+    def __init__(self, idx: int, stmt, kind: str):
+        self.idx = idx
+        self.stmt = stmt
+        self.kind = kind
+        self.succ: list = []      # normal-completion successors
+        self.esucc: list = []     # where control goes if this raises
+
+    def __repr__(self):
+        ln = getattr(self.stmt, "lineno", "-")
+        return f"<CFGNode {self.idx} {self.kind} L{ln}>"
+
+
+# Kinds whose node carries real user code an analysis should inspect.
+STMT_KINDS = frozenset({"stmt", "return", "raise-stmt", "branch", "loop",
+                        "with-enter", "break", "continue", "def", "except"})
+
+
+class CFG:
+    def __init__(self):
+        self.nodes: list = []
+        self.entry = self._new(None, "entry").idx
+        self.exit = self._new(None, "exit").idx
+        self.raise_ = self._new(None, "raise").idx
+
+    def _new(self, stmt, kind: str) -> CFGNode:
+        n = CFGNode(len(self.nodes), stmt, kind)
+        self.nodes.append(n)
+        return n
+
+    # -- small query helpers (used by checkers and the CFG tests) ----------
+    def nodes_at(self, lineno: int, kind: Optional[str] = None) -> list:
+        out = []
+        for n in self.nodes:
+            if getattr(n.stmt, "lineno", None) != lineno:
+                continue
+            if kind is None or n.kind == kind:
+                out.append(n)
+        return out
+
+    def has_path(self, src: int, dst: int, exceptional: bool = True) -> bool:
+        """Is ``dst`` reachable from ``src`` (following exception edges
+        too unless ``exceptional=False``)?"""
+        seen, todo = set(), [src]
+        while todo:
+            i = todo.pop()
+            if i == dst:
+                return True
+            if i in seen:
+                continue
+            seen.add(i)
+            n = self.nodes[i]
+            todo.extend(n.succ)
+            if exceptional:
+                todo.extend(n.esucc)
+        return False
+
+
+_Ctx = namedtuple("_Ctx", "exc ret brk cont")
+
+_SUPPRESS_NAMES = {"suppress", "contextlib.suppress"}
+_CATCH_ALL = {"Exception", "BaseException"}
+
+
+def _is_suppress(w) -> bool:
+    for item in w.items:
+        e = item.context_expr
+        if isinstance(e, ast.Call):
+            name = dotted_name(e.func)
+            if name in _SUPPRESS_NAMES:
+                return True
+    return False
+
+
+class _Builder:
+    def __init__(self, cfg: CFG):
+        self.cfg = cfg
+
+    def node(self, stmt, kind: str) -> CFGNode:
+        return self.cfg._new(stmt, kind)
+
+    def wire(self, preds, idx: int) -> None:
+        for p in preds:
+            if idx not in self.cfg.nodes[p].succ:
+                self.cfg.nodes[p].succ.append(idx)
+
+    def body(self, stmts, preds, ctx: _Ctx):
+        for s in stmts:
+            preds = self.stmt(s, preds, ctx)
+            if not preds:       # everything after return/raise is dead
+                break
+        return preds
+
+    def stmt(self, s, preds, ctx: _Ctx):
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            n = self.node(s, "def")      # nested scope: no flow into body
+            self.wire(preds, n.idx)
+            return {n.idx}
+        if isinstance(s, ast.Return):
+            n = self.node(s, "return")
+            self.wire(preds, n.idx)
+            n.succ.append(ctx.ret)
+            n.esucc.append(ctx.exc)      # the return expression may raise
+            return set()
+        if isinstance(s, ast.Raise):
+            n = self.node(s, "raise-stmt")
+            self.wire(preds, n.idx)
+            n.esucc.append(ctx.exc)
+            return set()
+        if isinstance(s, ast.Break):
+            n = self.node(s, "break")
+            self.wire(preds, n.idx)
+            if ctx.brk is not None:
+                n.succ.append(ctx.brk)
+            return set()
+        if isinstance(s, ast.Continue):
+            n = self.node(s, "continue")
+            self.wire(preds, n.idx)
+            if ctx.cont is not None:
+                n.succ.append(ctx.cont)
+            return set()
+        if isinstance(s, ast.If):
+            n = self.node(s, "branch")
+            self.wire(preds, n.idx)
+            n.esucc.append(ctx.exc)
+            out = self.body(s.body, {n.idx}, ctx)
+            if s.orelse:
+                out = out | self.body(s.orelse, {n.idx}, ctx)
+            else:
+                out = out | {n.idx}
+            return out
+        if isinstance(s, (ast.While, ast.For, ast.AsyncFor)):
+            test = self.node(s, "loop")
+            self.wire(preds, test.idx)
+            test.esucc.append(ctx.exc)   # iterator / test may raise
+            after = self.node(s, "loop-exit")
+            inner = ctx._replace(brk=after.idx, cont=test.idx)
+            out = self.body(s.body, {test.idx}, inner)
+            self.wire(out, test.idx)
+            if s.orelse:
+                oout = self.body(s.orelse, {test.idx}, ctx)
+                self.wire(oout, after.idx)
+            else:
+                test.succ.append(after.idx)
+            return {after.idx}
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            enter = self.node(s, "with-enter")
+            self.wire(preds, enter.idx)
+            enter.esucc.append(ctx.exc)  # __enter__/ctx expr may raise
+            exit_n = self.node(s, "with-exit")
+            exc_n = self.node(s, "with-exit-exc")
+            exc_n.succ.append(ctx.exc)   # __exit__ re-raises ...
+            if _is_suppress(s):
+                exc_n.succ.append(exit_n.idx)   # ... or swallows
+            inner = ctx._replace(exc=exc_n.idx)
+            out = self.body(s.body, {enter.idx}, inner)
+            self.wire(out, exit_n.idx)
+            return {exit_n.idx}
+        if isinstance(s, ast.Try):
+            return self.try_(s, preds, ctx)
+        n = self.node(s, "stmt")
+        self.wire(preds, n.idx)
+        n.esucc.append(ctx.exc)
+        return {n.idx}
+
+    def try_(self, t: ast.Try, preds, ctx: _Ctx):
+        after = self.node(t, "try-exit")
+
+        if t.finalbody:
+            memo: dict = {}
+
+            def thread(target):
+                """Route a continuation through a per-target copy of the
+                finally body (copies keep normal and exceptional passes
+                through the finally distinct)."""
+                if target is None:
+                    return None
+                if target not in memo:
+                    j = self.node(t, "finally")
+                    memo[target] = j.idx
+                    out = self.body(t.finalbody, {j.idx}, ctx)
+                    self.wire(out, target)
+                return memo[target]
+        else:
+            def thread(target):
+                return target
+
+        inner = _Ctx(exc=thread(ctx.exc), ret=thread(ctx.ret),
+                     brk=thread(ctx.brk), cont=thread(ctx.cont))
+
+        if t.handlers:
+            dispatch = self.node(t, "except-dispatch")
+            catch_all = any(
+                h.type is None or
+                (dotted_name(h.type) or "").split(".")[-1] in _CATCH_ALL
+                for h in t.handlers)
+            if not catch_all:
+                dispatch.succ.append(inner.exc)   # may match no handler
+            body_exc = dispatch.idx
+        else:
+            dispatch = None
+            body_exc = inner.exc
+
+        out = self.body(t.body, preds, inner._replace(exc=body_exc))
+        if t.orelse:
+            out = self.body(t.orelse, out, inner)
+        hout: set = set()
+        for h in t.handlers:
+            hentry = self.node(h, "except")
+            dispatch.succ.append(hentry.idx)
+            hout |= self.body(h.body, {hentry.idx}, inner)
+        tgt = thread(after.idx)
+        self.wire(out | hout, tgt)
+        return {after.idx}
+
+
+def build_cfg(func) -> CFG:
+    """CFG for a FunctionDef/AsyncFunctionDef body."""
+    cfg = CFG()
+    b = _Builder(cfg)
+    ctx = _Ctx(exc=cfg.raise_, ret=cfg.exit, brk=None, cont=None)
+    out = b.body(func.body, {cfg.entry}, ctx)
+    b.wire(out, cfg.exit)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# "can this statement plausibly raise" — shared by HL009/HL010 so both
+# checkers agree on which exception edges are real error paths.
+
+# Call leaf names that do not raise under normal operation (container /
+# sync primitives from HL002's stoplist, plus benign builtins, clock
+# reads, metric emits, and span/trace plumbing that is pure by HL008).
+BENIGN_CALLS = frozenset(RESOLVE_STOPLIST) | {
+    "len", "isinstance", "issubclass", "getattr", "setattr", "hasattr",
+    "min", "max", "abs", "sum", "sorted", "reversed", "list", "dict",
+    "set", "tuple", "frozenset", "deque", "int", "float", "str", "bool",
+    "repr", "id", "range", "zip", "enumerate", "print", "round", "vars",
+    "perf_counter", "monotonic", "time", "now", "popleft", "appendleft",
+    "span", "inc", "observe", "hist", "timeit", "debug", "info",
+    "warning", "exception", "lower", "upper", "rstrip", "lstrip",
+    "locked", "total_seconds", "bit_length", "hex",
+    # clock/sleep + trace plumbing (pure by HL008) + RNG methods: none
+    # of these raise under normal operation
+    "sleep", "trace_now", "add_span", "randrange", "randint", "random",
+    "uniform", "gauss", "choice", "shuffle", "getrandbits",
+}
+# Imported-module roots whose functions are treated as non-raising.
+BENIGN_ROOTS = ("math", "bisect", "heapq", "itertools", "collections",
+                "statistics", "logging", "random", "string", "re")
+
+
+def raising_calls(tree, aliases: Optional[dict] = None) -> list:
+    """Call nodes in ``tree`` that can plausibly raise.  Benign leaf
+    names and calls rooted at benign stdlib modules are excluded, as are
+    CapWords constructor calls (dataclass/exception construction)."""
+    aliases = aliases or {}
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name is None:            # computed callee, e.g. factories[k]()
+            out.append(node)
+            continue
+        parts = name.split(".")
+        root = aliases.get(parts[0], parts[0]).split(".")[0]
+        if root in BENIGN_ROOTS:
+            continue
+        leaf = parts[-1]
+        if leaf in BENIGN_CALLS:
+            continue
+        bare = leaf.lstrip("_")
+        if bare[:1].isupper():      # constructor / exception instantiation
+            continue
+        out.append(node)
+    return out
+
+
+def node_exprs(n: CFGNode) -> list:
+    """The AST fragments a CFG node actually *executes* (a ``branch``
+    node executes its test, not its body — the body has its own
+    nodes)."""
+    s = n.stmt
+    if s is None:
+        return []
+    if n.kind == "branch":
+        return [s.test]
+    if n.kind == "loop":
+        if isinstance(s, ast.While):
+            return [s.test]
+        return [s.iter, s.target]
+    if n.kind == "with-enter":
+        return [item.context_expr for item in s.items]
+    if n.kind in ("stmt", "return", "raise-stmt", "except"):
+        return [s]
+    return []       # virtual joins, finally headers, defs
+
+
+# ---------------------------------------------------------------------------
+# Interprocedural summary layer
+
+class FlowGraph:
+    """Per-project cache of CFGs plus the HL002 name-resolved call
+    graph, so checkers share both."""
+
+    def __init__(self, project):
+        self.project = project
+        self.graph = _Graph(project)
+        self._cfgs: dict = {}
+
+    def cfg(self, path: str, fi) -> CFG:
+        key = (path, fi.qualname)
+        if key not in self._cfgs:
+            self._cfgs[key] = build_cfg(fi.node)
+        return self._cfgs[key]
+
+    def aliases(self, path: str) -> dict:
+        return self.graph.aliases.get(path, {})
+
+
+class Summaries:
+    """May-summaries over the project call graph.
+
+    A checker provides ``direct(sf, fi) -> set`` extracting facts that
+    hold *directly* in a function body (e.g. "releases parameter
+    ``rt``"), expressed as ``(tag, param_name)`` pairs over the
+    function's own parameters.  The fixpoint then lifts the facts
+    through call sites: if ``g(self, x)`` passes its parameter ``x``
+    to ``f`` at a position ``f`` summarizes, ``g`` inherits the fact —
+    so helper wrappers around a release API are recognized wherever
+    they are called.  Resolution is the HL002 one: over-approximate by
+    method name, never through imported modules or stoplisted names.
+    """
+
+    def __init__(self, flowgraph: FlowGraph,
+                 direct: Callable[[object, object], set]):
+        self.fg = flowgraph
+        g = flowgraph.graph
+        # (path, qualname) -> {(tag, param_index)}
+        self.facts: dict = {}
+        params: dict = {}
+        for (path, qn), (sf, fi) in g.by_qualname.items():
+            names = [a.arg for a in fi.node.args.args]
+            if names and names[0] in ("self", "cls"):
+                names = names[1:]
+            params[(path, qn)] = names
+            got = set()
+            for tag, pname in direct(sf, fi):
+                if pname in names:
+                    got.add((tag, names.index(pname)))
+            if got:
+                self.facts[(path, qn)] = got
+
+        # fixpoint: lift through call sites
+        changed = True
+        while changed:
+            changed = False
+            for (path, qn), (sf, fi) in g.by_qualname.items():
+                names = params[(path, qn)]
+                if not names:
+                    continue
+                have = self.facts.setdefault((path, qn), set())
+                for call in ast.walk(fi.node):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    for tgt in self._resolve(path, call):
+                        for tag, i in self.facts.get(tgt, ()):
+                            arg = self._pos_arg(call, i)
+                            if isinstance(arg, ast.Name) \
+                                    and arg.id in names:
+                                fact = (tag, names.index(arg.id))
+                                if fact not in have:
+                                    have.add(fact)
+                                    changed = True
+
+    @staticmethod
+    def _pos_arg(call: ast.Call, i: int):
+        if i < len(call.args):
+            return call.args[i]
+        return None
+
+    def _resolve(self, path: str, call: ast.Call) -> list:
+        g = self.fg.graph
+        name = dotted_name(call.func)
+        if name is None:
+            return []
+        parts = name.split(".")
+        aliases = g.aliases.get(path, {})
+        out = []
+        if len(parts) == 1:
+            leaf = parts[0]
+            key = (path, leaf)
+            if key in g.by_qualname:
+                out.append(key)
+        else:
+            if parts[0] in aliases and parts[0] not in ("self", "cls"):
+                return []
+            leaf = parts[-1]
+            if leaf in RESOLVE_STOPLIST:
+                return []
+            for tgt in g.by_method.get(leaf, ()):
+                if "." in tgt[1]:
+                    out.append(tgt)
+        return out
+
+    def call_facts(self, path: str, call: ast.Call) -> set:
+        """``(tag, arg_node)`` facts a call site triggers: for every
+        resolved callee fact ``(tag, i)``, the argument actually passed
+        at position ``i``."""
+        out = set()
+        for tgt in self._resolve(path, call):
+            for tag, i in self.facts.get(tgt, ()):
+                arg = self._pos_arg(call, i)
+                if arg is not None:
+                    out.add((tag, arg))
+        return out
+
+
+# re-exported for checkers that need import-alias maps without pulling
+# purity's checker machinery
+import_aliases = _import_aliases

@@ -1,0 +1,181 @@
+"""Runtime resource-leak sanitizer (the dynamic half of HL009).
+
+Static HL009 proves acquire/release pairing along a function's own
+paths; it cannot follow a claim handed between threads — a gateway
+worker claims an arena, the janitor evicts, a trace finishes on a
+different thread than it started on.  This module wraps the same
+paired APIs the static checker knows (``ArenaPool.acquire``/
+``release``, ``HydraPlatform._claim_runtime``/``_return_runtime``,
+``Tracer.start_request``/``RequestTrace.finish``) and keeps a ledger of
+outstanding claims; a test that finishes a gateway replay or a cluster
+rebalance with unreturned resources fails with the acquiring thread
+and call site of every leaked claim.
+
+Usage (armed next to locksan in the tier-1 concurrency tests)::
+
+    from tools.hydralint import leaksan
+
+    with leaksan.sanitized():      # patches the paired APIs,
+        run_replay()               # ledgers claims, checks at exit
+        platform.shutdown()        # quiesce INSIDE the block
+
+Notes on fidelity:
+
+  * A claimed runtime that goes on active duty is settled either by
+    ``_return_runtime`` or by its ``shutdown()`` — platform/cluster
+    shutdown is the legitimate end of an active runtime's life, so the
+    workload must shut down inside the ``with`` block.
+  * Only head-sampled traces are ledgered (``NULL_TRACE`` is a no-op
+    singleton and never finishes).
+  * The ledger is keyed by object identity; double release is tolerated
+    (idempotent ``finish`` / pooled re-claim hand the object around).
+  * The meta-lock is a raw ``_thread`` lock so locksan never wraps it
+    when both sanitizers are armed together.
+"""
+from __future__ import annotations
+
+import _thread
+import contextlib
+import sys
+import threading
+
+__all__ = ["LeakSanitizer", "sanitized", "ResourceLeakError"]
+
+
+class ResourceLeakError(AssertionError):
+    pass
+
+
+def _call_site() -> str:
+    """file:line of the nearest frame outside this module."""
+    f = sys._getframe(2)
+    while f is not None and f.f_code.co_filename == __file__:
+        f = f.f_back
+    if f is None:
+        return "?"
+    return f"{f.f_code.co_filename.rsplit('/', 1)[-1]}:{f.f_lineno}"
+
+
+class LeakSanitizer:
+    """Ledger of outstanding claims across every paired API."""
+
+    def __init__(self):
+        self._meta = _thread.allocate_lock()   # raw: never locksan-wrapped
+        self._outstanding: dict = {}   # (kind, id) -> (label, thread, site)
+        self.claims = 0
+        self.releases = 0
+
+    # -- ledger ------------------------------------------------------------
+    def _on_claim(self, kind: str, obj, label: str = "") -> None:
+        site = _call_site()
+        with self._meta:
+            self._outstanding[(kind, id(obj))] = (
+                label, threading.current_thread().name, site)
+            self.claims += 1
+
+    def _on_release(self, kind: str, obj) -> None:
+        with self._meta:
+            if self._outstanding.pop((kind, id(obj)), None) is not None:
+                self.releases += 1
+
+    def outstanding(self) -> list:
+        with self._meta:
+            return [(kind, label, thread, site)
+                    for (kind, _oid), (label, thread, site)
+                    in sorted(self._outstanding.items(),
+                              key=lambda kv: kv[0])]
+
+    # -- patching ----------------------------------------------------------
+    @contextlib.contextmanager
+    def patched(self):
+        """Wrap the paired APIs on their classes.  Imports are lazy so
+        the sanitizer (like the rest of hydralint) adds no import-time
+        dependency on the runtime package."""
+        from repro.core.arena import ArenaPool
+        from repro.core.platform import HydraPlatform
+        from repro.core.runtime import HydraRuntime
+        from repro.core.tracing import RequestTrace, Tracer
+
+        san = self
+        saved = [
+            (ArenaPool, "acquire", ArenaPool.acquire),
+            (ArenaPool, "release", ArenaPool.release),
+            (HydraPlatform, "_claim_runtime", HydraPlatform._claim_runtime),
+            (HydraPlatform, "_return_runtime", HydraPlatform._return_runtime),
+            (HydraRuntime, "shutdown", HydraRuntime.shutdown),
+            (Tracer, "start_request", Tracer.start_request),
+            (RequestTrace, "finish", RequestTrace.finish),
+        ]
+        orig = {(cls.__name__, name): fn for cls, name, fn in saved}
+
+        def arena_acquire(pool, *a, **kw):
+            arena = orig[("ArenaPool", "acquire")](pool, *a, **kw)
+            san._on_claim("arena", arena,
+                          str(a[0] if a else kw.get("signature", "")))
+            return arena
+
+        def arena_release(pool, arena):
+            san._on_release("arena", arena)
+            return orig[("ArenaPool", "release")](pool, arena)
+
+        def claim_runtime(plat, *a, **kw):
+            rt = orig[("HydraPlatform", "_claim_runtime")](plat, *a, **kw)
+            san._on_claim("runtime", rt, getattr(rt, "name", ""))
+            return rt
+
+        def return_runtime(plat, rt):
+            san._on_release("runtime", rt)
+            return orig[("HydraPlatform", "_return_runtime")](plat, rt)
+
+        def runtime_shutdown(rt, *a, **kw):
+            # shutdown is the legitimate end of an active claim's life
+            san._on_release("runtime", rt)
+            return orig[("HydraRuntime", "shutdown")](rt, *a, **kw)
+
+        def start_request(tracer, fid, tenant=None):
+            ctx = orig[("Tracer", "start_request")](tracer, fid, tenant)
+            if isinstance(ctx, RequestTrace):
+                san._on_claim("trace", ctx, fid)
+            return ctx
+
+        def trace_finish(ctx, *a, **kw):
+            san._on_release("trace", ctx)
+            return orig[("RequestTrace", "finish")](ctx, *a, **kw)
+
+        ArenaPool.acquire = arena_acquire
+        ArenaPool.release = arena_release
+        HydraPlatform._claim_runtime = claim_runtime
+        HydraPlatform._return_runtime = return_runtime
+        HydraRuntime.shutdown = runtime_shutdown
+        Tracer.start_request = start_request
+        RequestTrace.finish = trace_finish
+        try:
+            yield self
+        finally:
+            for cls, name, fn in saved:
+                setattr(cls, name, fn)
+
+    # -- analysis ----------------------------------------------------------
+    def check(self) -> list:
+        """Human-readable leak reports (empty = clean)."""
+        return [
+            f"leaked {kind} claim {label!r}: acquired by thread "
+            f"{thread} at {site}, never returned"
+            for kind, label, thread, site in self.outstanding()]
+
+    def assert_clean(self) -> None:
+        leaks = self.check()
+        if leaks:
+            raise ResourceLeakError(
+                f"{len(leaks)} unreturned resource claim(s) at sanitizer "
+                "exit:\n" + "\n".join(leaks))
+
+
+@contextlib.contextmanager
+def sanitized():
+    """Patch the paired APIs, run the body, fail on outstanding claims.
+    Shut the workload down INSIDE the block so active runtimes settle."""
+    san = LeakSanitizer()
+    with san.patched():
+        yield san
+    san.assert_clean()

@@ -1,0 +1,435 @@
+"""HL009 — resource lifecycle: acquire/release paired on ALL paths.
+
+History: the density accounting rests on claims being returned — an
+arena slab that misses its ``release`` keeps budget reserved forever,
+a runtime claim that skips ``_return_runtime`` strands a worker, and an
+unfinished ``RequestTrace`` never reaches the flight recorder.  PR 4
+fixed exactly this class by hand (exception paths in ``_ensure_placed``
+leaving ``rec.runtime`` claimed); PR 8's ``register_signature`` probe
+had the same latent shape.  This checker walks the exception-aware CFG
+(``flow.py``): for every acquire site, the claim must be released,
+returned to the caller, or handed off to longer-lived state on *every*
+path out of the function — including the paths a raising call takes.
+
+The paired APIs are declared in :data:`RESOURCES`; adding a new paired
+resource is a one-line registry addition.  Matching is deliberately
+name-based (receiver suffix / enclosing class), mirroring HL002's
+over-approximate resolution.
+
+What counts as settling a claim:
+
+* a release call — ``pool.release(a)`` / ``self._return_runtime(rt)``
+  argument style, or ``ctx.finish()`` / ``f.close()`` method style
+  (release calls themselves are assumed not to raise: they are the
+  cleanup), including calls to project helpers that release one of
+  their parameters (interprocedural summary);
+* escape — the claim is returned/yielded, stored into an attribute,
+  container, or constructor result, or aliased: ownership left the
+  function, so pairing is the new owner's job;
+* rebinding the variable (tracking stops).
+
+Exception edges are only followed where the statement contains a call
+that can plausibly raise (``flow.raising_calls``) — straight-line
+arithmetic does not manufacture error paths.
+
+Suppress with ``# hydralint: disable=HL009`` plus a justification when
+a claim is intentionally left open (e.g. handed to a thread the
+checker cannot see).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Optional
+
+from tools.hydralint import Finding, Project, dotted_name
+from tools.hydralint import flow
+
+CODE = "HL009"
+
+
+@dataclass(frozen=True)
+class ResourceSpec:
+    """One acquire/release pairing.  ``*_receivers`` are dotted-name
+    leaf suffixes the receiver must match (empty = any receiver);
+    ``acquire_classes`` lets bare ``self.<acquire_attr>`` match inside
+    the owning class.  ``release_on_resource`` means the release is a
+    method *of* the claim (``v.close()``) rather than taking it as an
+    argument (``pool.release(v)``)."""
+    name: str
+    acquire_attr: str
+    release_attr: str
+    acquire_receivers: tuple = ()
+    release_receivers: tuple = ()
+    acquire_classes: tuple = ()
+    release_classes: tuple = ()
+    release_on_resource: bool = False
+    acquire_is_name_call: bool = False      # builtin-style: v = open(...)
+
+
+RESOURCES = (
+    ResourceSpec("arena", "acquire", "release",
+                 acquire_receivers=("arena_pool", "arenas", "pool"),
+                 release_receivers=("arena_pool", "arenas", "pool"),
+                 acquire_classes=("ArenaPool",),
+                 release_classes=("ArenaPool",)),
+    ResourceSpec("runtime-claim", "_claim_runtime", "_return_runtime"),
+    ResourceSpec("request-trace", "start_request", "finish",
+                 acquire_receivers=("tracer",),
+                 release_on_resource=True),
+    ResourceSpec("file-handle", "open", "close",
+                 acquire_is_name_call=True,
+                 release_on_resource=True),
+)
+
+# Receiver leaf suffixes that mark a manual ``<lock>.acquire()`` /
+# ``<lock>.release()`` pair (the ``with`` form is HL001's territory and
+# needs no pairing proof).
+LOCK_RECEIVER_HINTS = ("lock", "_cv", "_meta")
+
+_MUTATORS = {"append", "add", "extend", "insert", "appendleft", "put",
+             "put_nowait", "setdefault", "update", "register"}
+
+
+def _leaf(recv: Optional[str]) -> str:
+    return (recv or "").split(".")[-1]
+
+
+def _recv_matches(recv: Optional[str], suffixes: tuple,
+                  classes: tuple, cls_name: Optional[str]) -> bool:
+    if not suffixes:
+        return True
+    if _leaf(recv) in suffixes:
+        return True
+    return bool(recv == "self" and cls_name and cls_name in classes)
+
+
+def _is_lockish(recv: Optional[str]) -> bool:
+    leaf = _leaf(recv).lower()
+    return any(h in leaf for h in LOCK_RECEIVER_HINTS)
+
+
+def _uses(tree, var: str) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == var
+               for n in ast.walk(tree))
+
+
+def _calls_in(tree) -> list:
+    return [n for n in ast.walk(tree) if isinstance(n, ast.Call)]
+
+
+def _arg_of(call: ast.Call, var: str) -> bool:
+    for a in list(call.args) + [kw.value for kw in call.keywords]:
+        if isinstance(a, ast.Name) and a.id == var:
+            return True
+        if isinstance(a, (ast.Tuple, ast.List)) and _uses(a, var):
+            return True
+        if isinstance(a, ast.Starred) and _uses(a.value, var):
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# per-site path analysis
+
+class _Site:
+    def __init__(self, spec: ResourceSpec, var: str, node_idx: int,
+                 call: ast.Call):
+        self.spec = spec
+        self.var = var
+        self.node_idx = node_idx
+        self.call = call
+
+
+class _FuncScan:
+    def __init__(self, sf, fi, cfg, aliases, summaries):
+        self.sf = sf
+        self.fi = fi
+        self.cfg = cfg
+        self.aliases = aliases
+        self.summaries = summaries
+        self.cls_name = fi.cls.name if fi.cls is not None else None
+
+    # -- acquire sites -----------------------------------------------------
+    def sites(self) -> list:
+        out = []
+        for n in self.cfg.nodes:
+            if n.kind != "stmt" or not isinstance(n.stmt, ast.Assign):
+                continue
+            s = n.stmt
+            if len(s.targets) != 1 or not isinstance(s.targets[0], ast.Name):
+                continue
+            if not isinstance(s.value, ast.Call):
+                continue
+            spec = self._acquire_spec(s.value)
+            if spec is not None:
+                out.append(_Site(spec, s.targets[0].id, n.idx, s.value))
+        return out
+
+    def _acquire_spec(self, call: ast.Call) -> Optional[ResourceSpec]:
+        func = call.func
+        for spec in RESOURCES:
+            if spec.acquire_is_name_call:
+                if isinstance(func, ast.Name) and func.id == spec.acquire_attr:
+                    return spec
+                continue
+            if not isinstance(func, ast.Attribute):
+                continue
+            if func.attr != spec.acquire_attr:
+                continue
+            recv = dotted_name(func.value)
+            if spec.acquire_attr == "acquire" and _is_lockish(recv):
+                continue        # lock pairing handled separately
+            if _recv_matches(recv, spec.acquire_receivers,
+                             spec.acquire_classes, self.cls_name):
+                return spec
+        # helper wrappers whose summary says "returns a fresh claim"
+        if self.summaries is not None and isinstance(func, ast.Attribute):
+            for tag, _arg in self.summaries.call_facts(self.sf.path, call):
+                if tag.startswith("returns:"):
+                    name = tag.split(":", 1)[1]
+                    for spec in RESOURCES:
+                        if spec.name == name:
+                            return spec
+        return None
+
+    # -- settling a claim --------------------------------------------------
+    def releases(self, exprs, site: _Site) -> bool:
+        spec, var = site.spec, site.var
+        for tree in exprs:
+            for call in _calls_in(tree):
+                func = call.func
+                if spec.release_on_resource:
+                    if isinstance(func, ast.Attribute) \
+                            and func.attr == spec.release_attr \
+                            and isinstance(func.value, ast.Name) \
+                            and func.value.id == var:
+                        return True
+                if isinstance(func, ast.Attribute) \
+                        and func.attr == spec.release_attr:
+                    recv = dotted_name(func.value)
+                    if _recv_matches(recv, spec.release_receivers,
+                                     spec.release_classes, self.cls_name) \
+                            and _arg_of(call, var):
+                        return True
+                if isinstance(func, ast.Name) \
+                        and func.id == spec.release_attr \
+                        and _arg_of(call, var):
+                    return True
+                if self.summaries is not None:
+                    for tag, arg in self.summaries.call_facts(
+                            self.sf.path, call):
+                        if tag == f"releases:{spec.name}" \
+                                and isinstance(arg, ast.Name) \
+                                and arg.id == var:
+                            return True
+        return False
+
+    def escapes(self, exprs, site: _Site) -> bool:
+        var = site.var
+        for tree in exprs:
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Return) and node.value is not None \
+                        and _uses(node.value, var):
+                    return True
+                if isinstance(node, (ast.Yield, ast.YieldFrom)) \
+                        and node.value is not None \
+                        and _uses(node.value, var):
+                    return True
+                if isinstance(node, ast.Assign):
+                    val = node.value
+                    if isinstance(val, ast.Name) and val.id == var:
+                        return True          # alias: b = a
+                    if isinstance(val, (ast.Tuple, ast.List, ast.Dict,
+                                        ast.Set)) and _uses(val, var):
+                        return True          # packed into a container
+                    if any(isinstance(t, (ast.Attribute, ast.Subscript))
+                           for t in node.targets) and _uses(val, var):
+                        return True          # stored into attr/container
+                    # claim consumed by a call whose result is kept
+                    if any(_arg_of(c, var) for c in _calls_in(val)):
+                        return True
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _MUTATORS \
+                        and _arg_of(node, var):
+                    return True              # queue.append(claim), ...
+        return False
+
+    def rebinds(self, n, site: _Site) -> bool:
+        s = n.stmt
+        var = site.var
+        if n.kind == "stmt":
+            if isinstance(s, ast.Assign):
+                if any(isinstance(t, ast.Name) and t.id == var
+                       for t in s.targets):
+                    return True
+            if isinstance(s, (ast.AugAssign, ast.AnnAssign)) \
+                    and isinstance(s.target, ast.Name) \
+                    and s.target.id == var:
+                return True
+            if isinstance(s, ast.Delete) \
+                    and any(isinstance(t, ast.Name) and t.id == var
+                            for t in s.targets):
+                return True
+        if n.kind == "loop" and isinstance(s, (ast.For, ast.AsyncFor)) \
+                and _uses(s.target, var):
+            return True
+        return False
+
+    # -- the walk ----------------------------------------------------------
+    def leaks(self, site: _Site):
+        """(normal_leak, exception_leak) for one acquire site."""
+        cfg = self.cfg
+        seen = set()
+        todo = list(cfg.nodes[site.node_idx].succ)
+        leak_norm = leak_exc = False
+        while todo:
+            i = todo.pop()
+            if i in seen:
+                continue
+            seen.add(i)
+            n = cfg.nodes[i]
+            if n.kind == "exit":
+                leak_norm = True
+                continue
+            if n.kind == "raise":
+                leak_exc = True
+                continue
+            exprs = flow.node_exprs(n)
+            if exprs:
+                if i == site.node_idx:
+                    pass                     # looped back to the acquire
+                elif self.releases(exprs, site) \
+                        or self.escapes(exprs, site) \
+                        or self.rebinds(n, site):
+                    continue                 # claim settled on this path
+            todo.extend(n.succ)
+            if n.kind == "raise-stmt" or any(
+                    flow.raising_calls(e, self.aliases) for e in exprs):
+                todo.extend(n.esucc)
+        return leak_norm, leak_exc
+
+
+# ---------------------------------------------------------------------------
+# manual lock.acquire() pairing (resource == the receiver)
+
+def _lock_findings(sf, fi, cfg, aliases) -> list:
+    out = []
+    sites = []
+    for n in cfg.nodes:
+        if n.kind != "stmt" or not isinstance(n.stmt, ast.Expr):
+            continue
+        call = n.stmt.value
+        if not isinstance(call, ast.Call) \
+                or not isinstance(call.func, ast.Attribute):
+            continue
+        if call.func.attr != "acquire":
+            continue
+        recv = dotted_name(call.func.value)
+        if recv is not None and _is_lockish(recv):
+            sites.append((n, recv))
+
+    def settles(n, recv) -> bool:
+        for tree in flow.node_exprs(n):
+            for call in _calls_in(tree):
+                if isinstance(call.func, ast.Attribute) \
+                        and call.func.attr == "release" \
+                        and dotted_name(call.func.value) == recv:
+                    return True
+        return False
+
+    for site_n, recv in sites:
+        seen, todo = set(), list(site_n.succ)
+        leak_norm = leak_exc = False
+        while todo:
+            i = todo.pop()
+            if i in seen:
+                continue
+            seen.add(i)
+            n = cfg.nodes[i]
+            if n.kind == "exit":
+                leak_norm = True
+                continue
+            if n.kind == "raise":
+                leak_exc = True
+                continue
+            exprs = flow.node_exprs(n)
+            if exprs and i != site_n.idx and settles(n, recv):
+                continue
+            todo.extend(n.succ)
+            if n.kind == "raise-stmt" or any(
+                    flow.raising_calls(e, aliases) for e in exprs):
+                todo.extend(n.esucc)
+        if leak_norm or leak_exc:
+            where = _path_phrase(leak_norm, leak_exc)
+            out.append(Finding(
+                CODE, sf.path, site_n.stmt.lineno, site_n.stmt.col_offset,
+                f"manual {recv}.acquire() in {fi.qualname}() is not "
+                f"released on {where} — use `with {recv}:` or a "
+                f"try/finally",
+                f"{fi.qualname}:lock:{recv}"))
+    return out
+
+
+def _path_phrase(norm: bool, exc: bool) -> str:
+    if norm and exc:
+        return "some normal and exception paths"
+    if exc:
+        return "an exception path"
+    return "a normal path"
+
+
+# ---------------------------------------------------------------------------
+
+def _direct_summary(sf, fi) -> set:
+    """Direct facts for flow.Summaries: which of the function's own
+    parameters it releases, and whether it returns a fresh claim."""
+    facts = set()
+    cls_name = fi.cls.name if fi.cls is not None else None
+    for node in ast.walk(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        for spec in RESOURCES:
+            if spec.release_on_resource:
+                if isinstance(func, ast.Attribute) \
+                        and func.attr == spec.release_attr \
+                        and isinstance(func.value, ast.Name):
+                    facts.add((f"releases:{spec.name}", func.value.id))
+            elif isinstance(func, ast.Attribute) \
+                    and func.attr == spec.release_attr \
+                    and _recv_matches(dotted_name(func.value),
+                                      spec.release_receivers,
+                                      spec.release_classes, cls_name):
+                for a in node.args[:1]:
+                    if isinstance(a, ast.Name):
+                        facts.add((f"releases:{spec.name}", a.id))
+    return facts
+
+
+def check(project: Project) -> list:
+    fg = flow.FlowGraph(project)
+    summaries = flow.Summaries(fg, _direct_summary)
+    findings = []
+    for sf, fi in project.iter_funcs():
+        cfg = fg.cfg(sf.path, fi)
+        aliases = fg.aliases(sf.path)
+        scan = _FuncScan(sf, fi, cfg, aliases, summaries)
+        counts: dict = {}
+        for site in scan.sites():
+            leak_norm, leak_exc = scan.leaks(site)
+            if not (leak_norm or leak_exc):
+                continue
+            where = _path_phrase(leak_norm, leak_exc)
+            k = (site.spec.name, site.var)
+            i = counts.get(k, 0)
+            counts[k] = i + 1
+            findings.append(Finding(
+                CODE, sf.path, site.call.lineno, site.call.col_offset,
+                f"{site.spec.name} claim `{site.var}` in {fi.qualname}() "
+                f"is not {site.spec.release_attr}()d on {where} — pair "
+                f"the claim in a try/finally or settle it in an except",
+                f"{fi.qualname}:{site.spec.name}:{site.var}:{i}"))
+        findings.extend(_lock_findings(sf, fi, cfg, aliases))
+    return findings

@@ -1,0 +1,178 @@
+"""HL011 — sim/live accounting parity (conservation, not just names).
+
+History: the calibration round trip (PR 5) and the sim-vs-real CI gate
+only mean something because the live recorder emits a *complete*
+``SimResult`` — HL004 checks that metric *names* stay inside the shared
+vocabulary, but nothing checked that the accounting itself is
+conserved.  The failure mode is silent: add a ``SimResult`` field (the
+sim starts reporting it), forget the recorder/targets mapping, and
+every live replay reports the dataclass default — the validation gate
+then "passes" by comparing a measured number against a constant.
+
+Three conservation checks over the mapping layer:
+
+* **unfed field** — every field of ``class SimResult`` must be passed
+  explicitly where the live recorder (``*recorder*.py``) constructs
+  its ``SimResult``; a field the recorder cannot feed is sim-only
+  accounting and fails the gate's premise.
+* **dead counter** — every key a ``counters()`` provider (in
+  ``*targets*.py``) returns must be read by the recorder; an
+  accumulated-but-never-folded counter is accounting that leaks out of
+  the live ledger.
+* **phantom counter** — every ``c["key"]`` / ``c.get("key")`` the
+  recorder reads from ``adapter.counters()`` must be returned by every
+  provider; a missing key is a ``KeyError`` (or silent zero) at replay
+  end.
+
+Suppress with ``# hydralint: disable=HL011`` plus a justification for
+a deliberately sim-only or live-only quantity.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.hydralint import Finding, Project, dotted_name, str_const
+
+CODE = "HL011"
+
+
+def _simresult_fields(project: Project):
+    """(path, ClassDef, [field names]) for ``class SimResult``."""
+    hits = []
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef) and node.name == "SimResult":
+                fields = []
+                for stmt in node.body:
+                    if isinstance(stmt, ast.AnnAssign) \
+                            and isinstance(stmt.target, ast.Name):
+                        fields.append(stmt.target.id)
+                    elif isinstance(stmt, ast.Assign):
+                        for t in stmt.targets:
+                            if isinstance(t, ast.Name):
+                                fields.append(t.id)
+                if fields:
+                    hits.append((sf.path, node, fields))
+    hits.sort(key=lambda h: ("engine" not in h[0], h[0]))
+    return hits[0] if hits else None
+
+
+def _constructions(sf):
+    """SimResult(...) calls in one file: (call, {keywords}, has_star)."""
+    out = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name is None or name.split(".")[-1] != "SimResult":
+            continue
+        kws = {kw.arg for kw in node.keywords if kw.arg is not None}
+        has_star = any(kw.arg is None for kw in node.keywords)
+        out.append((node, kws, has_star))
+    return out
+
+
+def _counter_reads(sf):
+    """Keys read off variables assigned from ``*.counters()`` calls:
+    (key, read node)."""
+    counters_vars: set = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            name = dotted_name(node.value.func)
+            if name and name.split(".")[-1] == "counters":
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        counters_vars.add(t.id)
+    reads = []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id in counters_vars:
+            key = str_const(node.slice)
+            if key is not None:
+                reads.append((key, node))
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "get" \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id in counters_vars and node.args:
+            key = str_const(node.args[0])
+            if key is not None:
+                reads.append((key, node))
+    return reads
+
+
+def _providers(sf):
+    """counters() implementations returning dict literals:
+    (qualname, dict node, {keys})."""
+    out = []
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                visit(child, prefix + child.name + ".")
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if child.name == "counters":
+                    for ret in ast.walk(child):
+                        if isinstance(ret, ast.Return) \
+                                and isinstance(ret.value, ast.Dict):
+                            keys = {str_const(k) for k in ret.value.keys}
+                            keys.discard(None)
+                            out.append((prefix + child.name,
+                                        ret.value, keys))
+                visit(child, prefix + child.name + ".")
+    visit(sf.tree, "")
+    return out
+
+
+def _map_files(project: Project, token: str):
+    return [sf for sf in project.files
+            if token in sf.path.rsplit("/", 1)[-1]]
+
+
+def check(project: Project) -> list:
+    findings = []
+    sim = _simresult_fields(project)
+    recorders = _map_files(project, "recorder")
+    targets = _map_files(project, "targets")
+
+    # 1. unfed fields: the recorder's SimResult(...) must feed everything
+    if sim is not None and recorders:
+        _path, _cls, fields = sim
+        for sf in recorders:
+            for call, kws, has_star in _constructions(sf):
+                if has_star:
+                    continue        # **kwargs: not statically checkable
+                for f in fields:
+                    if f not in kws:
+                        findings.append(Finding(
+                            CODE, sf.path, call.lineno, call.col_offset,
+                            f"SimResult field {f!r} is not fed by this "
+                            f"live-recorder construction — the sim "
+                            f"reports it, the live replay would report "
+                            f"the dataclass default",
+                            f"unfed:{f}"))
+
+    # 2/3. counter conservation between providers and recorder reads
+    reads: dict = {}
+    for sf in recorders:
+        for key, node in _counter_reads(sf):
+            reads.setdefault(key, (sf, node))
+    for sf in targets:
+        for qualname, dnode, keys in _providers(sf):
+            for key in sorted(keys - set(reads)):
+                findings.append(Finding(
+                    CODE, sf.path, dnode.lineno, dnode.col_offset,
+                    f"counter {key!r} returned by {qualname}() is never "
+                    f"read by the recorder — accumulated accounting "
+                    f"leaks out of the live SimResult",
+                    f"dead-counter:{key}:{qualname}"))
+            for key in sorted(set(reads) - keys):
+                rsf, rnode = reads[key]
+                findings.append(Finding(
+                    CODE, rsf.path, rnode.lineno, rnode.col_offset,
+                    f"recorder reads counter {key!r} that {qualname}() "
+                    f"does not return — KeyError (or silent zero) at "
+                    f"replay end",
+                    f"phantom-counter:{key}:{qualname}"))
+    return findings
